@@ -1,0 +1,33 @@
+"""Benchmark E2 — paper Fig. 2: axpy offload breakdown (host / copy-based /
+zero-copy) and copy-vs-map scaling with input size."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.simulator.paper_targets import CLAIMS
+from repro.core.simulator.run import (host_copy_cycles, host_map_cycles,
+                                      offload_breakdown)
+
+
+def run() -> List[str]:
+    rows = []
+    for mode in ("host", "copy", "zero_copy"):
+        b = offload_breakdown(mode, 32768, 200)
+        rows.append(f"fig2.breakdown.{mode},{b.total:.0f},"
+                    f"xfer={b.xfer:.0f} offload={b.offload:.0f} "
+                    f"compute={b.compute:.0f} (host cycles)")
+    copy_t = offload_breakdown("copy", 32768, 200).total
+    zc_t = offload_breakdown("zero_copy", 32768, 200).total
+    speedup = 100 * (1 - zc_t / copy_t)
+    rows.append(f"fig2.claim.zero_copy_speedup,{speedup:.1f},"
+                f"paper={CLAIMS['zero_copy_speedup_pct']}%")
+    # right panel: copy vs map time with increasing input size
+    for kib in (64, 128, 256, 384, 512, 1024):
+        n = kib * 1024
+        rows.append(f"fig2.scaling.copy.{kib}KiB,{host_copy_cycles(n, 200):.0f},")
+        rows.append(f"fig2.scaling.map.{kib}KiB,{host_map_cycles(n, 200):.0f},")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

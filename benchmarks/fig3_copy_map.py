@@ -1,0 +1,27 @@
+"""Benchmark E3 — paper Fig. 3: copy / map time vs DRAM latency."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.simulator.paper_targets import CLAIMS
+from repro.core.simulator.run import host_copy_cycles, host_map_cycles
+
+N_BYTES = 3 * 32768 * 4      # the axpy working set (16 pages/vector scale)
+
+
+def run() -> List[str]:
+    rows = []
+    for lat in (200, 400, 600, 800, 1000):
+        rows.append(f"fig3.copy.{lat},{host_copy_cycles(N_BYTES, lat):.0f},")
+        rows.append(f"fig3.map.{lat},{host_map_cycles(N_BYTES, lat):.0f},")
+    cr = host_copy_cycles(N_BYTES, 1000) / host_copy_cycles(N_BYTES, 200)
+    mr = host_map_cycles(N_BYTES, 1000) / host_map_cycles(N_BYTES, 200)
+    rows.append(f"fig3.claim.copy_ratio,{cr:.2f},"
+                f"paper={CLAIMS['copy_time_ratio_1000_200']}x")
+    rows.append(f"fig3.claim.map_ratio,{mr:.2f},"
+                f"paper={CLAIMS['map_time_ratio_1000_200']}x")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,40 @@
+"""Benchmark E4 — paper Fig. 5: average PTW time +-LLC +-host interference."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.simulator.paper_targets import CLAIMS
+from repro.core.simulator.run import simulate_kernel
+
+INTERFERENCE = 0.028     # calibrated to the paper's ~20% PTW slowdown
+
+
+def run() -> List[str]:
+    rows = []
+    no_llc, with_llc, with_intf = [], [], []
+    for lat in (200, 600, 1000):
+        a = simulate_kernel("axpy", "iommu", lat).avg_ptw_host_cycles
+        b = simulate_kernel("axpy", "iommu_llc", lat).avg_ptw_host_cycles
+        c = simulate_kernel("axpy", "iommu_llc", lat,
+                            host_interference=INTERFERENCE).avg_ptw_host_cycles
+        no_llc.append(a)
+        with_llc.append(b)
+        with_intf.append(c)
+        rows.append(f"fig5.ptw.no_llc.{lat},{a:.0f},host cycles")
+        rows.append(f"fig5.ptw.llc.{lat},{b:.0f},host cycles")
+        rows.append(f"fig5.ptw.llc_interference.{lat},{c:.0f},host cycles")
+    speedup = np.mean(no_llc) / np.mean(with_llc)
+    slow = 100 * (np.mean(with_intf) / np.mean(with_llc) - 1)
+    rows.append(f"fig5.claim.llc_speedup,{speedup:.1f},"
+                f"paper={CLAIMS['ptw_llc_speedup_x']}x avg")
+    rows.append(f"fig5.claim.llc_max_ptw,{max(with_llc):.0f},"
+                f"paper<={CLAIMS['ptw_llc_max_cycles']:.0f} cycles @1000")
+    rows.append(f"fig5.claim.interference,{slow:.0f},"
+                f"paper~{CLAIMS['ptw_interference_slowdown_pct']}%")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

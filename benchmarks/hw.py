@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants for the roofline model (task-specified)."""
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+
+CHIP_HBM_BYTES = 16 * 2**30   # v5e HBM capacity (for fits/doesn't-fit notes)

@@ -1,0 +1,70 @@
+"""Benchmark E5 — the TPU adaptation of Fig. 2 at serving granularity:
+zero-copy (paged/mapped) vs copy-based (staged) KV admission, on the real
+continuous-batching engine with a reduced model (CPU-runnable).
+
+Also reports the paged-attention kernel's translation-traffic A/B:
+table-resident-in-SMEM (the paper's LLC-on) vs gather-through-HBM (LLC-off),
+as modeled data movement per decode step.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.serving.engine import ServingEngine
+from repro.models import init_params
+
+
+def _run_engine(mode: str, n_req: int = 6, max_tokens: int = 8):
+    cfg = reduce_for_smoke(get_config("llama3.2-1b"))
+    params = init_params(cfg, jax.random.key(0))
+    eng = ServingEngine(cfg, params, n_slots=3, max_len=64, page_size=8,
+                        offload_mode=mode)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for _ in range(n_req):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=12).tolist(),
+                   max_tokens=max_tokens)
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    return wall, eng.stats(), done
+
+
+def run() -> List[str]:
+    rows = []
+    stats = {}
+    for mode in ("zero_copy", "copy"):
+        wall, s, done = _run_engine(mode)
+        stats[mode] = (wall, s)
+        rows.append(f"paged_serving.{mode},{wall*1e6:.0f},"
+                    f"tokens={s['tokens']} prefill_s={s['prefill_s']:.3f} "
+                    f"staging_copies={s['staging_copies']} "
+                    f"bytes_copied={s['sva']['bytes_copied']}")
+    zc, cp = stats["zero_copy"][0], stats["copy"][0]
+    rows.append(f"paged_serving.zero_copy_advantage,{100*(1-zc/cp):.1f},"
+                "percent wall-time saved (CPU engine; paper Fig.2 analogue)")
+
+    # translation-traffic A/B per decode step (modeled bytes):
+    cfg = get_config("qwen2-7b")
+    B, L, page = 128, 32768, 64
+    n_pages = L // page
+    kv_layers = cfg.n_layers
+    kv_bytes = 2 * B * L * cfg.n_kv_heads * cfg.d_head * 2 * kv_layers
+    table_bytes = B * n_pages * 4 * kv_layers
+    rows.append(f"paged_serving.table_smem_bytes,{table_bytes},"
+                "block tables scalar-prefetched once per step (LLC-on analogue)")
+    rows.append(f"paged_serving.table_hbm_gather_bytes,{kv_bytes},"
+                "extra pool copy when translations resolve via HBM gather "
+                "(LLC-off analogue)")
+    rows.append(f"paged_serving.translation_traffic_ratio,"
+                f"{kv_bytes/max(table_bytes,1):.0f},x less traffic with "
+                "SMEM-resident tables (qwen2-7b decode_32k)")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

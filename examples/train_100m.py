@@ -1,0 +1,35 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter llama-family
+model for a few hundred steps on synthetic data, with checkpointing and
+fault tolerance enabled.
+
+  PYTHONPATH=src python examples/train_100m.py            # 300 steps (~30-60min CPU)
+  PYTHONPATH=src python examples/train_100m.py --quick    # 40 steps
+
+The config: 8L, d_model=768, d_ff=3072, vocab 32768 (tied) -> ~100M params.
+Loss on the synthetic zipf+markov stream: 10.51 -> 9.1 over 150 steps
+(recorded run in EXPERIMENTS.md §Training). Requires the 1/sqrt(2L)
+residual-init damping (models/model.py) — without it the embedding-table
+gradient explodes to ~2.6e6 and learning stalls.
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    args, _ = ap.parse_known_args()
+    steps = args.steps or (40 if args.quick else 300)
+    sys.exit(train_main([
+        "--arch", "llama3.2-1b",        # family template...
+        "--layers", "8",                 # ...resized to ~100M params
+        "--d-model", "768",
+        "--steps", str(steps),
+        "--batch", "4", "--seq", "128",
+        "--lr", "2e-3",
+        "--ckpt-dir", "/tmp/repro_100m_ckpt",
+        "--ckpt-every", "50",
+        "--log-every", "10",
+    ]))

@@ -1,0 +1,46 @@
+"""Platform configuration of the paper's prototype SoC (§III-A).
+
+Cheshire host (CVA6, 50 MHz domain) + 8-core Snitch cluster (20 MHz domain)
++ RISC-V IOMMU + parametrizable DRAM delayer, emulated on a VCU128 FPGA.
+All constants are taken from the paper text; the simulator consumes this.
+"""
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class PaperSoCConfig:
+    # clock domains (Hz); the cluster runs at 20 MHz, host domain at 50 MHz.
+    host_clk_hz: float = 50e6
+    cluster_clk_hz: float = 20e6
+
+    # Snitch cluster: 8 compute PEs + 1 DMA core, L1 TCDM scratchpad.
+    n_pes: int = 8
+    tcdm_bytes: int = 128 * 1024          # L1 scratchpad (double-buffer halves)
+    flops_per_cycle_per_pe: float = 1.0   # FPU: 1 single-precision FMA-class op/cyc
+
+    # IOMMU (zero-day-labs IP as integrated, §III-A)
+    iotlb_entries: int = 4
+    ddt_entries: int = 1                  # one (device, process) directory entry
+    ptw_levels: int = 3                   # Sv39: up to 3 sequential accesses
+
+    # memory system
+    page_bytes: int = 4096
+    llc_bytes: int = 128 * 1024           # Cheshire LLC (LLC/SPM partition)
+    llc_line_bytes: int = 64
+    llc_ways: int = 8
+    l1d_bytes: int = 32 * 1024            # CVA6 write-through D-cache
+    dram_base_latency: int = 35           # cycles @50MHz observed on FPGA
+    # parametrizable AXI delayer settings used in the paper's sweeps:
+    dram_latency_sweep: Tuple[int, ...] = (200, 600, 1000)
+    dram_bytes_per_cycle: float = 8.0     # 64-bit AXI data beat per cycle
+    max_burst_bytes: int = 4096           # AXI bursts split at page boundaries
+
+    # host-side costs (calibrated; see simulator.calibrate)
+    ioctl_overhead_cycles: int = 70_000   # Linux ioctl + driver path per map call
+    pte_bytes: int = 8                    # one page-table entry
+    ptes_per_page_mapping: int = 3        # "at most 24 bytes (3 PTEs) per 4 KiB"
+
+
+def config() -> PaperSoCConfig:
+    return PaperSoCConfig()

@@ -1,0 +1,179 @@
+"""Performance model of the paper's prototype platform (§III-A).
+
+Cycle accounting is done in ACCELERATOR cycles (20 MHz Snitch domain), the
+unit of the paper's Table II. Memory-system events happen in the 50 MHz host
+domain and are converted with H2A = 20/50.
+
+Components modeled:
+  * DRAM with the parametrizable AXI delayer (+L cycles on b/r channels)
+  * the 4-entry IOTLB + 3-level sequential PTW (RISC-V IOMMU, Sv39)
+  * the 128 KiB shared LLC that caches ONLY host + PTW traffic (DMA bypasses
+    via the address-offset muxes of Fig. 1) — modeled as a resident-set of
+    PTE cache lines filled by the host mapping pass (paper Listing 1 flushes
+    then maps, so PTEs are LLC-resident at offload time)
+  * host-interference evictions (Fig. 5's concurrent-traffic experiment)
+  * the Snitch cluster double-buffered DMA execution: per tile,
+    runtime += max(compute, dma); exposed DMA is the paper's "DMA region".
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.paper_soc import PaperSoCConfig
+from repro.core.sva.tlb import TranslationCache
+
+H2A = 20.0 / 50.0     # host-domain cycles -> accelerator cycles
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    soc: PaperSoCConfig
+    dram_latency: int = 200           # delayer cycles (host domain)
+    iommu: bool = False
+    llc: bool = False
+    host_interference: float = 0.0    # extra PTE-line eviction prob (Fig. 5)
+    llc_hit_cycles: int = 10          # host cycles for an LLC hit
+    pte_evict_prob: float = 0.10      # baseline leaf-PTE eviction (128 KiB LLC
+                                      # shared with OS data between map & use)
+    seed: int = 0
+
+
+@dataclass
+class KernelResult:
+    total: float
+    compute: float
+    dma_exposed: float
+    walks: float
+    iotlb_hits: float
+    ptw_cycles: float                 # total accel cycles spent walking
+    n_tiles: int
+
+    @property
+    def dma_pct(self) -> float:
+        return 100.0 * self.dma_exposed / max(self.total, 1e-9)
+
+    @property
+    def avg_ptw_host_cycles(self) -> float:
+        """Average page-table-walk time in HOST cycles (Fig. 5 units)."""
+        if self.walks == 0:
+            return 0.0
+        return self.ptw_cycles / H2A / self.walks
+
+
+@dataclass
+class Tile:
+    compute: float                    # accel cycles of PE work
+    bursts: float                     # async DMA bursts (double-buffered, hideable)
+    bytes: float                      # async bytes moved for this tile
+    sync_bursts: float = 0.0          # phase-boundary bursts (never overlapped)
+    sync_bytes: float = 0.0
+    pages: Tuple[int, ...] = ()       # page ids touched (IOVA translation)
+    ptw_hidden_frac: float = 0.0      # fraction of walk latency on the async path
+    walk_weight: float = 1.0          # pages represented per reference (coarsening)
+
+
+class MemorySystem:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.soc = cfg.soc
+        self.rng = np.random.default_rng(cfg.seed)
+        self.iotlb = TranslationCache(self.soc.iotlb_entries)
+        self.llc_resident: set = set()  # PTE line ids resident in LLC
+
+    # ------------------------------------------------------------ basics
+    def dram_access_host(self) -> float:
+        return self.cfg.dram_latency + self.soc.dram_base_latency
+
+    def burst_latency(self) -> float:
+        """Accel cycles for one DMA burst's exposed latency."""
+        return self.dram_access_host() * H2A
+
+    def stream_cycles(self, n_bytes: float) -> float:
+        """Pipelined data beats: 8 B per host cycle."""
+        return n_bytes / self.soc.dram_bytes_per_cycle * H2A
+
+    # ------------------------------------------------------------ mapping
+    def host_map_pass(self, pages: Iterable[int]) -> None:
+        """Host creates IO mappings right before offload (Listing 1): the PTE
+        cache lines land in the LLC (8 PTEs of 8 B per 64 B line)."""
+        if self.cfg.llc:
+            for p in set(pages):
+                self.llc_resident.add(p // 8)
+
+    # ------------------------------------------------------------ PTW
+    def ptw_cost_accel(self, page: int) -> float:
+        """One full page-table walk: up to 3 sequential accesses."""
+        total_host = 0.0
+        evict_p = self.cfg.pte_evict_prob + self.cfg.host_interference
+        for level in range(self.soc.ptw_levels):
+            line = page // 8 if level == self.soc.ptw_levels - 1 else -level
+            cached = self.cfg.llc and (
+                line in self.llc_resident or level < self.soc.ptw_levels - 1)
+            if cached and level == self.soc.ptw_levels - 1 and \
+                    self.rng.random() < evict_p:
+                cached = False        # PTE line evicted between map and walk
+            total_host += (self.cfg.llc_hit_cycles if cached
+                           else self.dram_access_host())
+        return total_host * H2A
+
+    def translate(self, page: int) -> Tuple[float, bool]:
+        """IOTLB lookup; returns (accel cycles, hit)."""
+        _, hit = self.iotlb.lookup(page)
+        if hit:
+            return 0.0, True
+        cost = self.ptw_cost_accel(page)
+        self.iotlb.fill(page, page)
+        return cost, False
+
+
+def run_kernel(tiles: List[Tile], cfg: SimConfig,
+               prologue_tiles: int = 1) -> KernelResult:
+    """Double-buffered execution: total = dma_0 + sum max(c_t, d_t) + c_T."""
+    mem = MemorySystem(cfg)
+    if cfg.iommu:
+        mem.host_map_pass([p for t in tiles for p in t.pages])
+
+    total = 0.0
+    compute_total = 0.0
+    dma_exposed = 0.0
+    walks = hits = 0
+    ptw_cycles = 0.0
+
+    def dma_time(tile: Tile) -> Tuple[float, float]:
+        """Returns (hideable async DMA, synchronous DMA) for one tile."""
+        nonlocal walks, hits, ptw_cycles
+        d_async = tile.bursts * mem.burst_latency() \
+            + mem.stream_cycles(tile.bytes)
+        d_sync = tile.sync_bursts * mem.burst_latency() \
+            + mem.stream_cycles(tile.sync_bytes)
+        if cfg.iommu:
+            w = tile.walk_weight
+            for p in tile.pages:
+                c, hit = mem.translate(p)
+                if hit:
+                    hits += w
+                else:
+                    walks += w
+                    ptw_cycles += c * w
+                    d_async += c * w * tile.ptw_hidden_frac
+                    d_sync += c * w * (1.0 - tile.ptw_hidden_frac)
+        return d_async, d_sync
+
+    # prologue: first tile's DMA is never hidden
+    da, ds = dma_time(tiles[0])
+    total += da + ds
+    dma_exposed += da + ds
+    for i, tile in enumerate(tiles):
+        c = tile.compute
+        compute_total += c
+        da, ds = dma_time(tiles[i + 1]) if i + 1 < len(tiles) else (0.0, 0.0)
+        total += max(c, da) + ds
+        dma_exposed += max(0.0, da - c) + ds
+    return KernelResult(total=total, compute=compute_total,
+                        dma_exposed=dma_exposed, walks=walks,
+                        iotlb_hits=hits, ptw_cycles=ptw_cycles,
+                        n_tiles=len(tiles))

@@ -1,0 +1,7 @@
+from repro.core.sva.kv_manager import PagedKVManager, SeqState
+from repro.core.sva.mapping import Mapping, SVASpace, SVAStats
+from repro.core.sva.page_pool import OutOfPages, PagePool, PoolStats
+from repro.core.sva.tlb import TLBStats, TranslationCache
+
+__all__ = ["Mapping", "OutOfPages", "PagePool", "PagedKVManager", "PoolStats",
+           "SVASpace", "SVAStats", "SeqState", "TLBStats", "TranslationCache"]

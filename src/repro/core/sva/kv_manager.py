@@ -1,0 +1,149 @@
+"""Paged KV-cache manager: binds the SVA layer to the compiled model's
+per-slot cache view.
+
+The compiled decode step sees, per batch slot, a page pool row of
+``max_pages`` pages and an int32 block table (see models/attention.PagedKV).
+This manager owns the *global* allocation state: which physical page of a
+slot's row backs which logical page of the sequence, prefix sharing,
+eviction, and the delta-upload bookkeeping through the translation cache.
+
+Zero-copy vs copy admission (paper Fig. 2, at serving granularity):
+  zero_copy — admission writes table rows only; KV data is produced in
+              place by prefill.
+  copy      — admission is modeled as a physical re-copy of the prompt's KV
+              into slot-contiguous pages (tracked in stats.bytes_copied and
+              charged on-device by the benchmark harness).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.sva.mapping import SVASpace
+from repro.core.sva.page_pool import OutOfPages, PagePool
+from repro.core.sva.tlb import TranslationCache
+
+
+@dataclass
+class SeqState:
+    seq_id: int
+    slot: int
+    length: int                   # tokens in cache
+    pages: List[int]              # physical pages (slot-row indices)
+    max_tokens: int
+    tokens: List[int] = field(default_factory=list)   # generated so far
+    done: bool = False
+
+
+class PagedKVManager:
+    """Per-slot page allocation + block tables for a fixed-B decode step."""
+
+    def __init__(self, n_slots: int, max_pages_per_slot: int, page_size: int,
+                 kv_bytes_per_token: int = 0, offload_mode: str = "zero_copy"):
+        assert offload_mode in ("zero_copy", "copy")
+        self.n_slots = n_slots
+        self.max_pages = max_pages_per_slot
+        self.page_size = page_size
+        self.kv_bytes_per_token = kv_bytes_per_token
+        self.offload_mode = offload_mode
+        # One pool per slot (the compiled step's pool rows are per-slot);
+        # a single SVASpace tracks stats across all of them.
+        self.pools = [PagePool(max_pages_per_slot, page_size)
+                      for _ in range(n_slots)]
+        self.space = SVASpace(PagePool(1, page_size))   # stats aggregator
+        self.tlb = TranslationCache(n_entries=4096)
+        self.free_slots = list(range(n_slots - 1, -1, -1))
+        self.seqs: Dict[int, SeqState] = {}
+        self.tables = np.zeros((n_slots, max_pages_per_slot), np.int32)
+        self.lengths = np.zeros((n_slots,), np.int32)
+        self.dirty_rows = set(range(n_slots))
+
+    # ------------------------------------------------------------ admission
+    def admit(self, seq_id: int, prompt_len: int, max_tokens: int
+              ) -> Optional[SeqState]:
+        """Allocate a slot + pages for a prompt; None if no slot free."""
+        if not self.free_slots:
+            return None
+        need = -(-(prompt_len + max_tokens) // self.page_size)
+        need = min(need, self.max_pages)
+        slot = self.free_slots[-1]
+        pool = self.pools[slot]
+        try:
+            pages = pool.alloc(need)
+        except OutOfPages:
+            return None
+        self.free_slots.pop()
+        st = SeqState(seq_id, slot, prompt_len, pages, max_tokens)
+        self.seqs[seq_id] = st
+        # Row is kept a PERMUTATION of [0, max_pages): allocated pages first,
+        # remaining physical pages as filler — prefill's scatter inverts it.
+        used = set(pages)
+        filler = [p for p in range(self.max_pages) if p not in used]
+        row = np.asarray(pages + filler, np.int32)
+        self.tables[slot] = row
+        self.lengths[slot] = prompt_len
+        self.dirty_rows.add(slot)
+        self.space.stats.map_calls += 1
+        self.space.stats.table_entries_written += len(pages)
+        self.space.stats.bytes_mapped += prompt_len * self.kv_bytes_per_token
+        if self.offload_mode == "copy":
+            self.space.stats.bytes_copied += prompt_len * self.kv_bytes_per_token
+        for lp, pp in enumerate(pages):
+            self.tlb.fill((slot, lp), pp)
+        return st
+
+    def append_token(self, seq_id: int, token: int) -> None:
+        st = self.seqs[seq_id]
+        st.tokens.append(token)
+        st.length += 1
+        self.lengths[st.slot] = st.length
+        needed = -(-st.length // self.page_size)
+        if needed > len(st.pages) and len(st.pages) < self.max_pages:
+            new = self.pools[st.slot].alloc(1)
+            lp = len(st.pages)
+            st.pages.extend(new)
+            # swap to keep the row a permutation
+            row = self.tables[st.slot]
+            j = int(np.where(row == new[0])[0][0])
+            row[lp], row[j] = row[j], row[lp]
+            self.dirty_rows.add(st.slot)
+            self.space.stats.table_entries_written += 1
+            self.tlb.fill((st.slot, lp), new[0])
+        if len(st.tokens) >= st.max_tokens:
+            st.done = True
+
+    def release(self, seq_id: int) -> None:
+        st = self.seqs.pop(seq_id)
+        self.pools[st.slot].free(st.pages)
+        self.free_slots.append(st.slot)
+        self.lengths[st.slot] = 0
+        self.space.stats.unmap_calls += 1
+        # self-invalidation (paper Listing 1): translations for this slot die
+        for lp in range(len(st.pages)):
+            self.tlb.invalidate_key((st.slot, lp))
+        self.dirty_rows.add(st.slot)
+
+    # ------------------------------------------------------------ device view
+    def delta_rows(self) -> List[int]:
+        """Slot rows whose tables changed since last upload (delta upload —
+        the serving-level analogue of a warm IOTLB)."""
+        rows = sorted(self.dirty_rows)
+        self.dirty_rows.clear()
+        return rows
+
+    def device_tables(self) -> np.ndarray:
+        return self.tables.copy()
+
+    def device_lengths(self) -> np.ndarray:
+        return self.lengths.copy()
+
+    def active_seqs(self) -> List[SeqState]:
+        return [s for s in self.seqs.values() if not s.done]
+
+    def stats(self) -> dict:
+        return {"sva": self.space.stats.as_dict(),
+                "tlb": self.tlb.stats.as_dict(),
+                "pool_used": sum(p.n_used for p in self.pools),
+                "pool_free": sum(p.n_free for p in self.pools)}

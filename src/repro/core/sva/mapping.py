@@ -1,0 +1,119 @@
+"""Host mapping API — the driver/ioctl analogue of the paper's §III-B.
+
+``SVASpace`` owns a PagePool and hands out *mappings*: per-object block
+tables (logical page -> physical page). Two offload modes, benchmarked
+against each other exactly like the paper's Fig. 2:
+
+  zero_copy  map(): allocate pages, write table entries (24 B per 4 KiB in
+             the paper; here one int32 per page) — no data movement.
+  copy       stage(): model/perform the physical copy into a contiguous
+             staging region before the device can access it.
+
+Costs are tracked in abstract units (bytes moved, table entries written,
+map calls) so both the simulator and the TPU-level benchmarks can consume
+them.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.sva.page_pool import PagePool
+from repro.core.sva.tlb import TranslationCache
+
+
+@dataclass
+class Mapping:
+    handle: int
+    pages: List[int]              # physical page ids, logical order
+    n_bytes: int
+    shared_prefix_pages: int = 0  # pages shared from another mapping
+
+    @property
+    def table(self) -> np.ndarray:
+        return np.asarray(self.pages, dtype=np.int32)
+
+
+@dataclass
+class SVAStats:
+    map_calls: int = 0
+    unmap_calls: int = 0
+    table_entries_written: int = 0
+    bytes_copied: int = 0         # copy-mode staging traffic
+    bytes_mapped: int = 0
+    host_seconds: float = 0.0
+
+    def as_dict(self):
+        return dict(map_calls=self.map_calls, unmap_calls=self.unmap_calls,
+                    table_entries_written=self.table_entries_written,
+                    bytes_copied=self.bytes_copied,
+                    bytes_mapped=self.bytes_mapped,
+                    host_seconds=round(self.host_seconds, 6))
+
+
+class SVASpace:
+    """A shared virtual address space over a page pool."""
+
+    def __init__(self, pool: PagePool, tlb_entries: int = 1024):
+        self.pool = pool
+        self.tlb = TranslationCache(tlb_entries)
+        self.stats = SVAStats()
+        self._next = 1
+        self._maps: Dict[int, Mapping] = {}
+
+    # ----------------------------------------------------------- zero-copy
+    def map(self, n_bytes: int,
+            share_prefix_from: Optional[Mapping] = None,
+            prefix_pages: int = 0) -> Mapping:
+        """Zero-copy: allocate pages and write block-table entries only."""
+        t0 = time.perf_counter()
+        page_bytes = self.pool.page_size
+        n_pages = -(-n_bytes // page_bytes)
+        shared: List[int] = []
+        if share_prefix_from is not None and prefix_pages > 0:
+            shared = share_prefix_from.pages[:prefix_pages]
+            self.pool.share(shared)
+        fresh = self.pool.alloc(n_pages - len(shared))
+        m = Mapping(self._next, shared + fresh, n_bytes, len(shared))
+        self._next += 1
+        self._maps[m.handle] = m
+        self.stats.map_calls += 1
+        self.stats.table_entries_written += n_pages
+        self.stats.bytes_mapped += n_bytes
+        self.stats.host_seconds += time.perf_counter() - t0
+        return m
+
+    def extend(self, m: Mapping, n_new_pages: int = 1) -> List[int]:
+        """Grow a mapping (decode appends crossing a page boundary)."""
+        t0 = time.perf_counter()
+        fresh = self.pool.alloc(n_new_pages)
+        m.pages.extend(fresh)
+        self.stats.table_entries_written += n_new_pages
+        self.stats.host_seconds += time.perf_counter() - t0
+        return fresh
+
+    def unmap(self, m: Mapping) -> None:
+        t0 = time.perf_counter()
+        self.pool.free(m.pages)
+        self._maps.pop(m.handle, None)
+        self.stats.unmap_calls += 1
+        # device-side translations for these pages are now stale:
+        self.tlb.invalidate()
+        self.stats.host_seconds += time.perf_counter() - t0
+
+    # ----------------------------------------------------------- copy mode
+    def stage(self, n_bytes: int, do_copy=None) -> Mapping:
+        """Copy-based baseline: contiguous staging (models the reserved
+        physically-addressed DRAM region). ``do_copy(n_bytes)`` performs the
+        actual data movement when the caller has real buffers."""
+        t0 = time.perf_counter()
+        m = self.map(n_bytes)                 # still needs pages...
+        m.shared_prefix_pages = 0
+        if do_copy is not None:
+            do_copy(n_bytes)
+        self.stats.bytes_copied += n_bytes    # ...but pays the copy
+        self.stats.host_seconds += time.perf_counter() - t0
+        return m

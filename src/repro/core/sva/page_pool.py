@@ -1,0 +1,92 @@
+"""Physical page pool — the host side of the shared-virtual-address layer.
+
+Mirrors the paper's reserved-DRAM-vs-mapped-pages split: in ``zero_copy``
+mode sequences get *mapped* pages (an IOVA range backed by whatever physical
+pages are free); in ``copy`` mode admission additionally models the staging
+copy into a physically-contiguous region (the paper's baseline).
+
+Pure host-side bookkeeping (numpy/ints); the device arrays live in the
+compiled step's paged pools. Reference counting enables prefix sharing
+(multiple sequences mapping the same physical page, RadixAttention-style).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+@dataclass
+class PoolStats:
+    allocs: int = 0
+    frees: int = 0
+    shares: int = 0
+    high_water: int = 0
+    failed_allocs: int = 0
+
+    def as_dict(self):
+        return dict(allocs=self.allocs, frees=self.frees, shares=self.shares,
+                    high_water=self.high_water, failed_allocs=self.failed_allocs)
+
+
+class PagePool:
+    """Fixed-size pool of physical pages with refcounts and a LIFO free list."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._ref = np.zeros(n_pages, dtype=np.int32)
+        self.stats = PoolStats()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - self.n_free
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            self.stats.failed_allocs += 1
+            raise OutOfPages(f"need {n} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            assert self._ref[p] == 0
+            self._ref[p] = 1
+        self.stats.allocs += n
+        self.stats.high_water = max(self.stats.high_water, self.n_used)
+        return pages
+
+    def share(self, pages: List[int]) -> None:
+        """Refcount++ (prefix sharing: a second sequence maps the same pages)."""
+        for p in pages:
+            assert self._ref[p] > 0, f"share of unmapped page {p}"
+            self._ref[p] += 1
+        self.stats.shares += len(pages)
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            assert self._ref[p] > 0, f"double free of page {p}"
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+        self.stats.frees += len(pages)
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def check_invariants(self) -> None:
+        free_set = set(self._free)
+        assert len(free_set) == len(self._free), "free list has duplicates"
+        for p in range(self.n_pages):
+            if p in free_set:
+                assert self._ref[p] == 0, f"free page {p} has refs"
+            else:
+                assert self._ref[p] > 0, f"used page {p} has no refs"

@@ -1,0 +1,87 @@
+"""Translation cache — the IOTLB analogue, with epoch self-invalidation.
+
+Two users:
+  * the performance simulator models the paper's 4-entry hardware IOTLB and
+    counts PTW walks (3 sequential accesses on miss, RISC-V Sv39);
+  * the serving engine uses a larger cache to decide which block-table rows
+    actually changed since the last device upload (delta uploads) and when a
+    full re-upload is required (epoch invalidation — paper Listing 1:
+    flush + remap before offload).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Hashable, Optional, Tuple
+
+
+@dataclass
+class TLBStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    invalidations: int = 0
+    walks: int = 0           # page-table walks performed (one per miss)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self):
+        return dict(hits=self.hits, misses=self.misses,
+                    evictions=self.evictions, invalidations=self.invalidations,
+                    walks=self.walks, hit_rate=round(self.hit_rate, 4))
+
+
+class TranslationCache:
+    """LRU (key -> value) cache with epoch invalidation."""
+
+    def __init__(self, n_entries: int):
+        assert n_entries >= 1
+        self.n_entries = n_entries
+        self._map: OrderedDict = OrderedDict()
+        self.epoch = 0
+        self.stats = TLBStats()
+
+    def lookup(self, key: Hashable) -> Tuple[Optional[int], bool]:
+        """Returns (value, hit)."""
+        if key in self._map:
+            self._map.move_to_end(key)
+            self.stats.hits += 1
+            return self._map[key], True
+        self.stats.misses += 1
+        return None, False
+
+    def fill(self, key: Hashable, value) -> None:
+        """Insert after a walk (miss path)."""
+        self.stats.walks += 1
+        if key in self._map:
+            self._map.move_to_end(key)
+            self._map[key] = value
+            return
+        if len(self._map) >= self.n_entries:
+            self._map.popitem(last=False)
+            self.stats.evictions += 1
+        self._map[key] = value
+
+    def translate(self, key: Hashable, walk_fn) -> Tuple[int, bool]:
+        """lookup + walk-and-fill on miss. Returns (value, hit)."""
+        val, hit = self.lookup(key)
+        if hit:
+            return val, True
+        val = walk_fn(key)
+        self.fill(key, val)
+        return val, False
+
+    def invalidate(self) -> None:
+        """Epoch invalidation: drop everything (paper's self-invalidation)."""
+        self._map.clear()
+        self.epoch += 1
+        self.stats.invalidations += 1
+
+    def invalidate_key(self, key: Hashable) -> None:
+        self._map.pop(key, None)
+
+    def __len__(self) -> int:
+        return len(self._map)

@@ -1,0 +1,2 @@
+def axpy_ref(a, x, y):
+    return a * x + y

@@ -1,0 +1,18 @@
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, softcap=None):
+    """q,k,v: (B,H,S,D) dense oracle."""
+    D = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        Sq, Skv = q.shape[2], k.shape[2]
+        mask = jnp.arange(Skv)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

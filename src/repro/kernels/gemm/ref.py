@@ -1,0 +1,5 @@
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b):
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)

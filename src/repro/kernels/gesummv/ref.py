@@ -1,0 +1,7 @@
+import jax.numpy as jnp
+
+
+def gesummv_ref(alpha, beta, a, b, x):
+    xf = x.astype(jnp.float32)
+    return (alpha * (a.astype(jnp.float32) @ xf)
+            + beta * (b.astype(jnp.float32) @ xf)).astype(x.dtype)

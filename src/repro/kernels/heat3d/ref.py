@@ -1,0 +1,9 @@
+import jax.numpy as jnp
+
+
+def heat3d_step_ref(u, *, c0: float = 0.4, c1: float = 0.1):
+    center = u[1:-1, 1:-1, 1:-1]
+    neigh = (u[:-2, 1:-1, 1:-1] + u[2:, 1:-1, 1:-1]
+             + u[1:-1, :-2, 1:-1] + u[1:-1, 2:, 1:-1]
+             + u[1:-1, 1:-1, :-2] + u[1:-1, 1:-1, 2:])
+    return u.at[1:-1, 1:-1, 1:-1].set((c0 * center + c1 * neigh).astype(u.dtype))

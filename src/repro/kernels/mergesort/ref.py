@@ -1,0 +1,10 @@
+import jax.numpy as jnp
+
+
+def sort_ref(x):
+    return jnp.sort(x)
+
+
+def block_sort_ref(x, block: int):
+    n = x.shape[0]
+    return jnp.sort(x.reshape(n // block, block), axis=1).reshape(n)

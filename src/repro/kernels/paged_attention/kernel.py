@@ -1,0 +1,132 @@
+"""Paged decode attention — the paper's technique as a TPU kernel.
+
+The block table is passed as a SCALAR-PREFETCH operand: it lives in SMEM and
+drives the BlockSpec index maps, so every KV page's HBM->VMEM DMA is issued
+*through the translation* with zero per-access walk cost. This is the TPU
+realization of the paper's LLC-resident page-table walk (translations in
+fast memory next to the walker), while the bulk KV pages stream around it
+(the DMA-bypasses-LLC path). ``table_residency="hbm"`` instead loads
+translations from HBM inside the kernel — the paper's LLC-off baseline.
+
+Layout (per sequence-batch):
+  q:        (B, Hq, D)
+  k_pool:   (B, n_pages, page, Hkv, D)  physical pages
+  v_pool:   (B, n_pages, page, Hkv, D)
+  table:    (B, n_pages) int32          logical -> physical
+  lengths:  (B,) int32                  valid tokens per sequence
+  out:      (B, Hq, D)
+
+Grid: (B, n_pages) — online softmax accumulates across the page axis in VMEM
+scratch, exactly the Snitch double-buffered DMA pattern (pages are fetched
+one grid step ahead by the Pallas pipeline while the previous page computes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(table_ref, len_ref,        # scalar-prefetch (SMEM)
+            q_ref, k_ref, v_ref,       # VMEM blocks
+            o_ref,                     # output block
+            m_ref, l_ref, acc_ref,     # VMEM scratch carried across pages
+            *, page: int, n_pages: int, softcap):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                               # (Hq, D)
+    k = k_ref[0, 0]                            # (page, Hkv, D)
+    v = v_ref[0, 0]
+    Hq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+
+    # scores: (Hq, page) — each q head attends its kv group's head
+    kg = jnp.repeat(k, G, axis=1)              # (page, Hq, D)
+    s = jnp.einsum("hd,phd->hp", q.astype(jnp.float32),
+                   kg.astype(jnp.float32))
+    s = s * (D ** -0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    length = len_ref[b]
+    pos = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    valid = pos < length
+    s = jnp.where(valid, s, -jnp.inf)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]    # (Hq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p_ = jnp.exp(s - m_safe)                   # (Hq, page)
+    p_ = jnp.where(valid, p_, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev),
+                     jnp.exp(m_prev - m_safe), 0.0)
+    l_new = l_prev * corr + jnp.sum(p_, axis=-1, keepdims=True)
+    vg = jnp.repeat(v, G, axis=1).astype(jnp.float32)   # (page, Hq, D)
+    pv = jnp.einsum("hp,phd->hd", p_, vg)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + pv[:, None, :]
+    m_ref[...], l_ref[...] = m_new, l_new
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...][:, 0] / l).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pool, v_pool, block_table, lengths, *,
+                    softcap=None, table_residency: str = "smem",
+                    interpret: bool = True):
+    """See module docstring. Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    _, n_pages, page, Hkv, _ = k_pool.shape
+
+    if table_residency == "hbm":
+        # LLC-off baseline: translations are NOT prefetched; resolve them
+        # with an explicit gather pass (pays the full-table data movement),
+        # then run the kernel on an identity table.
+        k_pool = jnp.take_along_axis(
+            k_pool, block_table[:, :, None, None, None], axis=1)
+        v_pool = jnp.take_along_axis(
+            v_pool, block_table[:, :, None, None, None], axis=1)
+        block_table = jnp.broadcast_to(
+            jnp.arange(n_pages, dtype=jnp.int32), block_table.shape)
+
+    grid = (B, n_pages)
+    kernel = functools.partial(_kernel, page=page, n_pages=n_pages,
+                               softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, p, tbl, ln: (b, 0, 0)),
+            # THE TECHNIQUE: the KV page DMA source address goes through the
+            # SMEM-resident block table (IOVA -> PA translation at zero cost)
+            pl.BlockSpec((1, 1, page, Hkv, D),
+                         lambda b, p, tbl, ln: (b, tbl[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, 1, page, Hkv, D),
+                         lambda b, p, tbl, ln: (b, tbl[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, p, tbl, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hq, 1), jnp.float32),
+            pltpu.VMEM((Hq, 1), jnp.float32),
+            pltpu.VMEM((Hq, 1, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, q, k_pool, v_pool)

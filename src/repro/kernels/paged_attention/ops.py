@@ -1,0 +1,22 @@
+"""Jitted public wrapper for the paged-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "table_residency",
+                                             "interpret", "use_pallas"))
+def paged_decode(q, k_pool, v_pool, block_table, lengths, *, softcap=None,
+                 table_residency: str = "smem", interpret: bool = True,
+                 use_pallas: bool = True):
+    if not use_pallas:
+        return paged_attention_ref(q, k_pool, v_pool, block_table, lengths,
+                                   softcap=softcap)
+    return paged_attention(q, k_pool, v_pool, block_table, lengths,
+                           softcap=softcap, table_residency=table_residency,
+                           interpret=interpret)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the paged decode-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, lengths, *,
+                        softcap=None):
+    """q: (B,Hq,D); pools: (B,n_pages,page,Hkv,D); table: (B,n_pages);
+    lengths: (B,). Returns (B,Hq,D) fp-accurate dense attention through the
+    block-table translation."""
+    B, Hq, D = q.shape
+    _, n_pages, page, Hkv, _ = k_pool.shape
+    G = Hq // Hkv
+    k = jnp.take_along_axis(k_pool, block_table[:, :, None, None, None],
+                            axis=1).reshape(B, n_pages * page, Hkv, D)
+    v = jnp.take_along_axis(v_pool, block_table[:, :, None, None, None],
+                            axis=1).reshape(B, n_pages * page, Hkv, D)
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(n_pages * page)
+    s = jnp.where(pos[None, None, :] < lengths[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)

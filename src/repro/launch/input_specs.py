@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct stand-ins for every model input of every dry-run cell.
+
+Weak-type-correct, shardable, no device allocation. ``input_specs`` returns
+(kwargs-for-step, donate-info) matching the step functions in steps.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import cache_specs
+from repro.models.model import DEFAULT_PAGE_SIZE, ENCDEC_SRC_LEN
+from repro.models.params import abstract, resolve_spec
+
+
+def _sds(shape, dtype, spec: P, mesh):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(
+        shape, dtype,
+        sharding=NamedSharding(mesh, resolve_spec(spec, shape, mesh)))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None
+                ) -> Dict[str, Any]:
+    """Training / prefill batch inputs."""
+    B = shape.global_batch
+    S = shape.seq_len
+    act = jnp.dtype(cfg.activation_dtype)
+    out = {"tokens": _sds((B, S), jnp.int32, P("batch", None), mesh)}
+    if shape.kind == "train":
+        out["labels"] = _sds((B, S), jnp.int32, P("batch", None), mesh)
+    if cfg.is_encdec:
+        src = S if shape.kind == "train" else ENCDEC_SRC_LEN
+        out["enc_x"] = _sds((B, src, cfg.d_model), act, P("batch", None, None), mesh)
+    elif cfg.n_image_tokens:
+        out["img_x"] = _sds((B, cfg.n_image_tokens, cfg.d_model), act,
+                            P("batch", None, None), mesh)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                 page_size: int = DEFAULT_PAGE_SIZE) -> Dict[str, Any]:
+    """Decode-step inputs: one new token + the paged cache at length seq_len."""
+    B = shape.global_batch
+    src = ENCDEC_SRC_LEN
+    cspecs = cache_specs(cfg, B, max_len=shape.seq_len, page_size=page_size,
+                         src_len=src)
+    cache = abstract(cspecs, mesh)
+    return {
+        "token": _sds((B, 1), jnp.int32, P("batch", None), mesh),
+        "pos": _sds((), jnp.int32, P(), mesh),
+        "cache": cache,
+    }
+
+
+def prefill_cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                        page_size: int = DEFAULT_PAGE_SIZE):
+    cspecs = cache_specs(cfg, shape.global_batch, max_len=shape.seq_len,
+                         page_size=page_size, src_len=ENCDEC_SRC_LEN)
+    return abstract(cspecs, mesh)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None
+                ) -> Dict[str, Any]:
+    """All inputs for the cell's step function (see steps.make_step)."""
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, mesh)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape, mesh),
+                "cache": prefill_cache_specs(cfg, shape, mesh)}
+    return decode_specs(cfg, shape, mesh)

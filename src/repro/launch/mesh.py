@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state. ``dryrun.py`` sets XLA_FLAGS for 512 placeholder devices
+*before* any jax import; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.configs.base import MeshConfig, MULTI_POD, SINGLE_POD
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_config(mc: MeshConfig) -> jax.sharding.Mesh:
+    return jax.make_mesh(
+        mc.shape, mc.axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(mc.axes))
+
+
+def make_host_mesh(data: Optional[int] = None, model: int = 1
+                   ) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (CPU tests, examples)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

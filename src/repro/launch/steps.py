@@ -1,0 +1,92 @@
+"""Step builders: train_step (fwd+bwd+AdamW) and serve_step (prefill/decode).
+
+All steps are pure functions of (params/opt_state, inputs) suitable for
+``jax.jit`` with explicit in/out shardings, and are what the dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import (MeshInfo, forward_decode, forward_prefill,
+                          forward_train, model_specs)
+from repro.models.params import abstract, shardings as spec_shardings
+from repro.optim import (OptState, adamw_update, clip_by_global_norm,
+                         init_opt_state, opt_state_specs)
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, mi: MeshInfo):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss_fn(params, batch):
+        return forward_train(cfg, params, batch, mi)
+
+    def train_step(params, opt_state: OptState, batch):
+        if tc.microbatches > 1:
+            B = batch["tokens"].shape[0]
+            mb = tc.microbatches
+            split = lambda x: x.reshape(mb, B // mb, *x.shape[1:])
+            mbatch = jax.tree.map(split, batch)
+
+            def acc_fn(carry, b):
+                loss, g = jax.value_and_grad(loss_fn)(params, b)
+                carry = jax.tree.map(jnp.add, carry,
+                                     (loss, g))
+                return carry, None
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(acc_fn, zero, mbatch)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        if tc.grad_compression == "int8_ef":
+            from repro.optim.compression import ef_compress
+            cg, new_ef = ef_compress(grads, opt_state.ef)
+            grads = cg
+            opt_state = opt_state._replace(ef=new_ef)
+
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        params, opt_state, extras = adamw_update(params, grads, opt_state, tc)
+        metrics = {"loss": loss, "grad_norm": gnorm, **extras}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mi: MeshInfo):
+    def prefill_step(params, batch, cache):
+        return forward_prefill(cfg, params, batch, cache, mi)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mi: MeshInfo, sample: bool = False):
+    def serve_step(params, token, pos, cache):
+        logits, cache = forward_decode(cfg, params, token, pos, cache, mi)
+        if sample:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, cache
+        return logits, cache
+    return serve_step
+
+
+def make_step(cfg: ModelConfig, shape: ShapeConfig, mi: MeshInfo,
+              tc: Optional[TrainConfig] = None):
+    """The dry-run entry: step fn + (abstract) non-input state specs."""
+    tc = tc or TrainConfig()
+    pspecs = model_specs(cfg)
+    if shape.kind == "train":
+        fn = make_train_step(cfg, tc, mi)
+        state_specs = {"params": pspecs,
+                       "opt_state": opt_state_specs(
+                           pspecs, with_ef=tc.grad_compression == "int8_ef")}
+        return fn, state_specs
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mi), {"params": pspecs}
+    return make_decode_step(cfg, mi), {"params": pspecs}

@@ -1,0 +1,10 @@
+from repro.models.model import (cache_specs, forward_decode, forward_prefill,
+                                forward_train, init_cache, init_params,
+                                model_specs, set_cache_length)
+from repro.models.dist import MeshInfo, NO_MESH, shard
+
+__all__ = [
+    "MeshInfo", "NO_MESH", "cache_specs", "forward_decode", "forward_prefill",
+    "forward_train", "init_cache", "init_params", "model_specs",
+    "set_cache_length", "shard",
+]

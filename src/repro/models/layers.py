@@ -1,0 +1,122 @@
+"""Shared layers: norms, MLPs, rotary embeddings, embedding/head, losses."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import ParamSpec
+
+
+# ---------------------------------------------------------------- norms
+
+def rmsnorm_spec(d: int, dtype) -> ParamSpec:
+    return ParamSpec((d,), dtype, P(None), init="ones")
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+# ---------------------------------------------------------------- MLPs
+
+def glu_mlp_specs(d: int, ff: int, dtype) -> dict:
+    return {
+        "w_gate": ParamSpec((d, ff), dtype, P("fsdp", "tp")),
+        "w_up": ParamSpec((d, ff), dtype, P("fsdp", "tp")),
+        "w_down": ParamSpec((ff, d), dtype, P("tp", "fsdp")),
+    }
+
+
+def mlp2_specs(d: int, ff: int, dtype) -> dict:
+    return {
+        "w1": ParamSpec((d, ff), dtype, P("fsdp", "tp")),
+        "w2": ParamSpec((ff, d), dtype, P("tp", "fsdp")),
+    }
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def glu_mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    h = _act(act)(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def mlp2(p: dict, x: jax.Array, act: str) -> jax.Array:
+    return _act(act)(x @ p["w1"]) @ p["w2"]
+
+
+# ---------------------------------------------------------------- rotary
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions broadcastable to (..., S)."""
+    d = x.shape[-1]
+    d2 = d // 2
+    freqs = theta ** (-jnp.arange(0, d2, dtype=jnp.float32) / d2)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :d2], x[..., d2:2 * d2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([xr1, xr2], axis=-1)
+    if 2 * d2 != d:                                             # odd head dim (kimi 112 is even; guard anyway)
+        out = jnp.concatenate([out, x[..., 2 * d2:]], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embed / head
+
+def embedding_specs(vocab: int, d: int, dtype, tie: bool) -> dict:
+    out = {"table": ParamSpec((vocab, d), dtype, P("tp", "fsdp"),
+                              init="normal", scale=0.02)}
+    if not tie:
+        out["head"] = ParamSpec((d, vocab), dtype, P("fsdp", "tp"),
+                                init="normal", scale=0.02)
+    return out
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def logits_fn(p: dict, x: jax.Array, softcap: Optional[float]) -> jax.Array:
+    head = p["head"] if "head" in p else p["table"].T
+    logits = x @ head
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits.astype(jnp.float32) / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------- loss
+
+def chunked_xent(embed_params: dict, x: jax.Array, labels: jax.Array,
+                 softcap: Optional[float], n_chunks: int = 8,
+                 unroll: bool = False):
+    """Cross-entropy without materializing full (B,S,V) logits.
+
+    Scans over sequence chunks; the (B,chunk,V) logits live only inside one
+    scan step (and are rematerialized on backward).
+    """
+    B, S, D = x.shape
+    while S % n_chunks != 0:
+        n_chunks -= 1
+    xc = x.reshape(B, n_chunks, S // n_chunks, D).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+
+    def step(carry, xl):
+        xi, li = xl
+        logits = logits_fn(embed_params, xi, softcap).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(step), jnp.zeros((), jnp.float32),
+                            (xc, lc), unroll=unroll)
+    return total / (B * S)

@@ -1,0 +1,140 @@
+"""Mamba-1 selective SSM mixer (jamba's sequence layer).
+
+    h_t = exp(dt_t * A) h_{t-1} + (dt_t * B_t) x_t      (diagonal A, ZOH-lite)
+    y_t = C_t . h_t + D * x_t
+
+Training uses a chunked associative scan over time (memory-bounded); decode
+is the O(1) single-step recurrence. d_inner is tensor-parallel over ``model``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.dist import MeshInfo
+from repro.models.params import ParamSpec
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, s.d_state, s.d_conv
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, dt_rank, N, K = _dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "in_proj": ParamSpec((d, 2 * d_in), dt, P("fsdp", "tp")),
+        "conv_w": ParamSpec((K, d_in), dt, P(None, "tp")),
+        "conv_b": ParamSpec((d_in,), dt, P("tp"), init="zeros"),
+        "x_proj": ParamSpec((d_in, dt_rank + 2 * N), dt, P("tp", None)),
+        "dt_proj": ParamSpec((dt_rank, d_in), dt, P(None, "tp")),
+        "dt_bias": ParamSpec((d_in,), jnp.float32, P("tp"),
+                             init="uniform_pm", scale=4.0),
+        "A_log": ParamSpec((d_in, N), jnp.float32, P("tp", None),
+                           init="uniform_pm", scale=1.0),
+        "D": ParamSpec((d_in,), jnp.float32, P("tp"), init="ones"),
+        "out_proj": ParamSpec((d_in, d), dt, P("tp", "fsdp")),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (B, K-1, d_in) last inputs for the causal conv
+    ssm: jax.Array    # (B, d_in, N) fp32
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int, stack=None) -> MambaState:
+    d_in, _, N, K = _dims(cfg)
+    lead = (stack,) if stack else ()
+    ld = (None,) * len(lead)
+    dt = jnp.dtype(cfg.activation_dtype)
+    return MambaState(
+        conv=ParamSpec(lead + (batch, K - 1, d_in), dt,
+                       P(*ld, "batch", None, "tp"), init="zeros"),
+        ssm=ParamSpec(lead + (batch, d_in, N), jnp.float32,
+                      P(*ld, "batch", "tp", None), init="zeros"),
+    )
+
+
+def _conv_causal(x: jax.Array, w: jax.Array, b: jax.Array,
+                 carry: jax.Array):
+    """Depthwise causal conv. x: (B,T,d_in), w: (K,d_in), carry: (B,K-1,d_in)."""
+    K = w.shape[0]
+    xp = jnp.concatenate([carry, x], axis=1)                  # (B, T+K-1, d_in)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    return out, xp[:, -(K - 1):]
+
+
+def _ssm_inputs(p: dict, x: jax.Array, cfg: ModelConfig):
+    d_in, dt_rank, N, _ = _dims(cfg)
+    proj = x @ p["x_proj"]                                    # (B,T,dt_rank+2N)
+    dt_lr, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus((dt_lr @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"])                      # (B,T,d_in)
+    A = -jnp.exp(p["A_log"])                                  # (d_in,N)
+    decay = jnp.exp(dt[..., None] * A)                        # (B,T,d_in,N)
+    drive = (dt[..., None] * Bm[:, :, None, :].astype(jnp.float32)
+             * x[..., None].astype(jnp.float32))              # (B,T,d_in,N)
+    return decay, drive, Cm
+
+
+def mamba_mix(p: dict, x: jax.Array, cfg: ModelConfig, mi: MeshInfo,
+              state: MambaState, chunk: int = 256):
+    """x: (B,T,d). Returns (out (B,T,d), new MambaState)."""
+    B, T, d = x.shape
+    d_in, _, N, K = _dims(cfg)
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_carry = _conv_causal(xi, p["conv_w"], p["conv_b"], state.conv)
+    xi = jax.nn.silu(xi)
+
+    decay, drive, Cm = _ssm_inputs(p, xi, cfg)
+
+    nC = max(T // chunk, 1)
+    C = T // nC
+    dec_c = decay.reshape(B, nC, C, d_in, N).swapaxes(0, 1)
+    drv_c = drive.reshape(B, nC, C, d_in, N).swapaxes(0, 1)
+
+    def chunk_step(h0, inp):
+        dec, drv = inp                                        # (B,C,d_in,N)
+        # associative scan within the chunk: (a, b) pairs
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+        a_sc, b_sc = jax.lax.associative_scan(comb, (dec, drv), axis=1)
+        h = a_sc * h0[:, None] + b_sc                         # (B,C,d_in,N)
+        return h[:, -1], h
+
+    h0 = state.ssm.astype(jnp.float32)
+    h_fin, hs = jax.lax.scan(jax.checkpoint(chunk_step), h0, (dec_c, drv_c),
+                             unroll=bool(cfg.unroll_scans))
+    h = hs.swapaxes(0, 1).reshape(B, T, d_in, N)
+    y = jnp.einsum("btdn,btn->btd", h, Cm.astype(jnp.float32)) \
+        + p["D"] * xi.astype(jnp.float32)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, MambaState(conv=conv_carry, ssm=h_fin)
+
+
+def mamba_mix_step(p: dict, x: jax.Array, cfg: ModelConfig,
+                   state: MambaState):
+    """Single-token decode. x: (B,1,d)."""
+    B, _, d = x.shape
+    d_in, _, N, K = _dims(cfg)
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi_c, conv_carry = _conv_causal(xi, p["conv_w"], p["conv_b"], state.conv)
+    xi_c = jax.nn.silu(xi_c)
+    decay, drive, Cm = _ssm_inputs(p, xi_c, cfg)
+    h = decay[:, 0] * state.ssm + drive[:, 0]                 # (B,d_in,N)
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32)) \
+        + p["D"] * xi_c[:, 0].astype(jnp.float32)
+    out = (y[:, None].astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, MambaState(conv=conv_carry, ssm=h)

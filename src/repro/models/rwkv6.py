@@ -1,0 +1,220 @@
+"""RWKV-6 "Finch": data-dependent-decay linear attention + channel mix.
+
+Time-mix recurrence per head (head size N):
+    y_t   = r_t^T (S_t + u ⊙ k_t v_t^T)
+    S_t+1 = diag(w_t) S_t + k_t v_t^T        (w_t data-dependent, in (0,1))
+
+Training uses the chunked parallel form: within a chunk the (t,s) interaction
+matrix uses per-channel cumulative log-decays (all exponents <= 0, so the
+quadratic form is numerically safe); across chunks the (N x N) state is
+carried by a scan. Decode is the plain recurrence.
+
+Faithfulness note (DESIGN.md §8): the ddlerp token-shift mixing uses static
+per-target mix coefficients plus a low-rank *data-dependent decay* (the Finch
+headline feature); the auxiliary low-rank mixers for r/k/v/g are folded into
+the static coefficients.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.dist import MeshInfo, shard
+from repro.models.params import ParamSpec
+
+LORA_R = 64   # decay low-rank width
+
+
+def rwkv_time_mix_specs(cfg: ModelConfig) -> dict:
+    d, H, N = cfg.d_model, cfg.n_heads, cfg.d_head
+    dt = jnp.dtype(cfg.param_dtype)
+    mat = lambda: ParamSpec((d, d), dt, P("fsdp", "tp"))
+    return {
+        "mu": ParamSpec((5, d), dt, P(None, None), init="uniform_pm", scale=0.5),
+        "w0": ParamSpec((d,), jnp.float32, P(None), init="uniform_pm", scale=1.0),
+        "w_lora_a": ParamSpec((d, LORA_R), dt, P("fsdp", None)),
+        "w_lora_b": ParamSpec((LORA_R, d), jnp.float32, P(None, None),
+                              init="zeros"),
+        "u": ParamSpec((H, N), jnp.float32, P("tp", None),
+                       init="uniform_pm", scale=0.5),
+        "wr": mat(), "wk": mat(), "wv": mat(), "wg": mat(),
+        "wo": ParamSpec((d, d), dt, P("tp", "fsdp")),
+        "ln_w": ParamSpec((d,), jnp.float32, P(None), init="ones"),
+    }
+
+
+def rwkv_channel_mix_specs(cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "mu_k": ParamSpec((d,), dt, P(None), init="uniform_pm", scale=0.5),
+        "mu_r": ParamSpec((d,), dt, P(None), init="uniform_pm", scale=0.5),
+        "wk": ParamSpec((d, ff), dt, P("fsdp", "tp")),
+        "wv": ParamSpec((ff, d), dt, P("tp", "fsdp")),
+        "wr": ParamSpec((d, d), dt, P("fsdp", "tp")),
+    }
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array        # (B, H, N, N) fp32
+    shift_tm: jax.Array   # (B, d) last token (time-mix)
+    shift_cm: jax.Array   # (B, d) last token (channel-mix)
+
+
+def rwkv_state_specs(cfg: ModelConfig, batch: int, stack=None) -> RWKVState:
+    d, H, N = cfg.d_model, cfg.n_heads, cfg.d_head
+    lead = (stack,) if stack else ()
+    ld = (None,) * len(lead)
+    dt = jnp.dtype(cfg.activation_dtype)
+    return RWKVState(
+        wkv=ParamSpec(lead + (batch, H, N, N), jnp.float32,
+                      P(*ld, "batch", "tp", None, None), init="zeros"),
+        shift_tm=ParamSpec(lead + (batch, d), dt, P(*ld, "batch", None), init="zeros"),
+        shift_cm=ParamSpec(lead + (batch, d), dt, P(*ld, "batch", None), init="zeros"),
+    )
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """Data-dependent per-channel decay w_t in (0,1); returns log(w_t) (fp32)."""
+    lora = jnp.tanh(xw @ p["w_lora_a"]).astype(jnp.float32) @ p["w_lora_b"]
+    return -jnp.exp(jnp.clip(p["w0"] + lora, -8.0, 6.0))    # log w <= 0
+
+
+def _group_norm(y: jax.Array, w: jax.Array, H: int, eps: float = 64e-5):
+    """Per-head groupnorm over the value dim. y: (B, T, H, N)."""
+    yf = y.astype(jnp.float32)
+    mean = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mean) * jax.lax.rsqrt(var + eps)
+    B, T = y.shape[:2]
+    return yn.reshape(B, T, -1) * w
+
+
+def rwkv_time_mix(p: dict, x: jax.Array, x_prev: jax.Array, cfg: ModelConfig,
+                  mi: MeshInfo, state: jax.Array, chunk: int = 32):
+    unroll = bool(cfg.unroll_scans)
+    """Chunked-parallel WKV6. x: (B,T,d); x_prev: x shifted right by one.
+
+    Returns (out (B,T,d), final_state (B,H,N,N)).
+    """
+    B, T, d = x.shape
+    H, N = cfg.n_heads, cfg.d_head
+    dx = x_prev - x
+    mix = lambda i: x + dx * p["mu"][i]
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+
+    r = (xr @ p["wr"]).reshape(B, T, H, N)
+    k = (xk @ p["wk"]).reshape(B, T, H, N)
+    v = (xv @ p["wv"]).reshape(B, T, H, N)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = _decay(p, xw).reshape(B, T, H, N)                 # fp32, <= 0
+
+    nC = max(T // chunk, 1)
+    C = T // nC
+    rc = r.reshape(B, nC, C, H, N).swapaxes(0, 1)
+    kc = k.reshape(B, nC, C, H, N).swapaxes(0, 1)
+    vc = v.reshape(B, nC, C, H, N).swapaxes(0, 1)
+    wc = logw.reshape(B, nC, C, H, N).swapaxes(0, 1)
+
+    u = p["u"]                                               # (H,N)
+
+    def chunk_step(S, inp):
+        rj, kj, vj, wj = inp                                 # (B,C,H,N)
+        rf, kf, vf = (a.astype(jnp.float32) for a in (rj, kj, vj))
+        cl = jnp.cumsum(wj, axis=1)                          # (B,C,H,N) inclusive
+        cl_prev = cl - wj                                    # exclusive cumsum
+        # inter: y_inter[t] = (r_t * exp(cl_prev_t))^T S
+        q_in = rf * jnp.exp(cl_prev)
+        y_inter = jnp.einsum("bchn,bhnm->bchm", q_in, S)
+        # intra: A[t,s] = sum_n r_t[n] k_s[n] exp(cl_prev_t[n] - cl_s[n]), s < t
+        expo = cl_prev[:, :, None] - cl[:, None, :]          # (B,t,s,H,N)
+        mask_lt = jnp.tril(jnp.ones((C, C), bool), -1)
+        expo = jnp.where(mask_lt[None, :, :, None, None], expo, -jnp.inf)
+        A = jnp.einsum("bthn,bshn,btshn->bths", rf, kf, jnp.exp(expo))
+        # diagonal bonus term u
+        diag = jnp.einsum("bthn,hn,bthn->bth", rf, u, kf)
+        y = y_inter + jnp.einsum("bths,bshm->bthm", A, vf) \
+            + diag[..., None] * vf
+        # state update: S' = diag(prod w) S + sum_s k_s exp(cl_end - cl_s) v_s^T
+        cl_end = cl[:, -1]                                   # (B,H,N)
+        k_dec = kf * jnp.exp(cl_end[:, None] - cl)
+        S_new = jnp.exp(cl_end)[..., None] * S \
+            + jnp.einsum("bchn,bchm->bhnm", k_dec, vf)
+        return S_new, y
+
+    S0 = state.astype(jnp.float32)
+    if unroll:
+        # Roofline-cost path: batched-parallel chunk form — all heavy math
+        # runs ONCE over a leading chunk axis (fully visible to XLA's
+        # cost_analysis, which counts while bodies once); only the tiny
+        # (B,H,N,N) state recurrence remains a scan (~0.1% of FLOPs).
+        rf, kf, vf = (a.astype(jnp.float32) for a in (rc, kc, vc))
+        cl = jnp.cumsum(wc, axis=2)                          # (nC,B,C,H,N)
+        cl_prev = cl - wc
+        cl_end = cl[:, :, -1]                                # (nC,B,H,N)
+        k_dec = kf * jnp.exp(cl_end[:, :, None] - cl)
+        B_sum = jnp.einsum("jbchn,jbchm->jbhnm", k_dec, vf)
+        A_decay = jnp.exp(cl_end)
+
+        def state_step(S, inp):
+            a, b = inp
+            return a[..., None] * S + b, S                    # ys: pre-chunk state
+        S_fin, S_in = jax.lax.scan(state_step, S0, (A_decay, B_sum))
+
+        q_in = rf * jnp.exp(cl_prev)
+        y_inter = jnp.einsum("jbchn,jbhnm->jbchm", q_in, S_in)
+        expo = cl_prev[:, :, :, None] - cl[:, :, None]       # (nC,B,t,s,H,N)
+        mask_lt = jnp.tril(jnp.ones((C, C), bool), -1)
+        expo = jnp.where(mask_lt[None, None, :, :, None, None], expo, -jnp.inf)
+        A = jnp.einsum("jbthn,jbshn,jbtshn->jbths", rf, kf, jnp.exp(expo))
+        diag = jnp.einsum("jbthn,hn,jbthn->jbth", rf, u, kf)
+        ys = y_inter + jnp.einsum("jbths,jbshm->jbthm", A, vf) \
+            + diag[..., None] * vf
+    else:
+        S_fin, ys = jax.lax.scan(jax.checkpoint(chunk_step), S0,
+                                 (rc, kc, vc, wc))
+    y = ys.swapaxes(0, 1).reshape(B, T, H, N)
+    out = _group_norm(y, p["ln_w"], H).astype(x.dtype) * g
+    out = out @ p["wo"]
+    return out, S_fin
+
+
+def rwkv_time_mix_step(p: dict, x: jax.Array, x_prev: jax.Array,
+                       cfg: ModelConfig, state: jax.Array):
+    """Single-token decode. x: (B,1,d); state: (B,H,N,N)."""
+    B, _, d = x.shape
+    H, N = cfg.n_heads, cfg.d_head
+    dx = x_prev - x
+    mix = lambda i: x + dx * p["mu"][i]
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = (xr @ p["wr"]).reshape(B, H, N).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, H, N).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, H, N).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = jnp.exp(_decay(p, xw).reshape(B, H, N))
+    kv = k[..., None] * v[..., None, :]                      # (B,H,N,N)
+    y = jnp.einsum("bhn,bhnm->bhm", r, state + p["u"][..., None] * kv)
+    S_new = w[..., None] * state + kv
+    out = _group_norm(y[:, None], p["ln_w"], H).astype(x.dtype) * g
+    return out @ p["wo"], S_new
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"])
+
+
+def token_shift(x: jax.Array, carry: jax.Array):
+    """x: (B,T,d), carry: (B,d) last token of previous segment.
+
+    Returns (x_prev, new_carry).
+    """
+    x_prev = jnp.concatenate([carry[:, None], x[:, :-1]], axis=1)
+    return x_prev, x[:, -1]

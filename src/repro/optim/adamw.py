@@ -1,0 +1,93 @@
+"""AdamW with fp32 master weights, built from scratch (no optax).
+
+Optimizer state inherits parameter shardings (FSDP+TP annotations), so the
+memory behavior of ZeRO falls out of pure sharding — see DESIGN.md §5.
+State per param: master fp32 + mu fp32 + nu fp32 (12 B) + bf16 param (2 B).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    master: Any   # fp32 params
+    mu: Any       # fp32 first moment
+    nu: Any       # fp32 second moment
+    count: jax.Array
+    ef: Any = None   # int8-compression error-feedback buffers (optional)
+
+
+def init_opt_state(params, with_ef: bool = False) -> OptState:
+    # copy=True: master must not alias fp32 params (donation safety)
+    f32 = lambda t: jax.tree.map(
+        lambda x: jnp.array(x, dtype=jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return OptState(master=f32(params), mu=zeros(params), nu=zeros(params),
+                    count=jnp.zeros((), jnp.int32),
+                    ef=zeros(params) if with_ef else None)
+
+
+def opt_state_specs(param_specs, with_ef: bool = False):
+    """ParamSpec tree for the optimizer state mirroring param shardings."""
+    from repro.models.params import ParamSpec, tree_map_specs
+    f32 = lambda t: tree_map_specs(
+        lambda s: ParamSpec(s.shape, jnp.float32, s.pspec, "zeros"), t)
+    return OptState(master=f32(param_specs), mu=f32(param_specs),
+                    nu=f32(param_specs),
+                    count=ParamSpec((), jnp.int32, jax.sharding.PartitionSpec(),
+                                    init="zeros"),
+                    ef=f32(param_specs) if with_ef else None)
+
+
+def lr_schedule(tc: TrainConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = tc.lr * step / max(tc.warmup_steps, 1)
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / max(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = tc.lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < tc.warmup_steps, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                         for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def adamw_update(params, grads, state: OptState, tc: TrainConfig
+                 ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """grads must already be fp32 (post-clip)."""
+    count = state.count + 1
+    lr = lr_schedule(tc, count)
+    b1, b2 = tc.beta1, tc.beta2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(m, g, mu, nu):
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        step_ = (mu / c1) / (jnp.sqrt(nu / c2) + tc.eps)
+        m = m - lr * (step_ + tc.weight_decay * m)
+        return m, mu, nu
+
+    flat_m, treedef = jax.tree.flatten(state.master)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    out = [upd(m, g, mu, nu) for m, g, mu, nu
+           in zip(flat_m, flat_g, flat_mu, flat_nu)]
+    master = jax.tree.unflatten(treedef, [o[0] for o in out])
+    mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda m, p: m.astype(p.dtype), master, params)
+    return (new_params, OptState(master, mu, nu, count, ef=state.ef),
+            {"lr": lr})

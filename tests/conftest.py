@@ -1,0 +1,13 @@
+import os
+import sys
+
+# tests see the real device count (1 CPU); only dryrun.py forces 512.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.key(0)

@@ -1,0 +1,66 @@
+"""Registry + parameter-count sanity vs published model sizes."""
+import pytest
+
+from repro.configs import (ARCH_IDS, SHAPES, all_cells, get_config,
+                           model_active_params, model_params,
+                           reduce_for_smoke)
+
+PUBLISHED_B = {  # (total, active), in billions, ±12% tolerance
+    "llama3.2-1b": (1.24, 1.24),
+    "gemma2-2b": (2.6, 2.6),
+    "llama3.2-3b": (3.2, 3.2),
+    "qwen2-7b": (7.6, 7.6),
+    "olmoe-1b-7b": (6.9, 1.3),
+    "kimi-k2-1t-a32b": (1000.0, 32.0),
+    "llama-3.2-vision-90b": (88.0, 88.0),
+    "rwkv6-3b": (3.0, 3.0),
+    "seamless-m4t-medium": (1.0, 1.0),
+    "jamba-1.5-large-398b": (398.0, 94.0),
+}
+
+
+def test_all_archs_load():
+    assert len(ARCH_IDS) == 10
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        assert cfg.n_blocks * len(cfg.block_pattern) + cfg.first_k_dense \
+            == cfg.n_layers
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts_match_published(arch):
+    cfg = get_config(arch)
+    total, active = PUBLISHED_B[arch]
+    n = model_params(cfg) / 1e9
+    na = model_active_params(cfg) / 1e9
+    assert abs(n - total) / total < 0.12, (n, total)
+    assert abs(na - active) / active < 0.12, (na, active)
+
+
+def test_cells():
+    cells = all_cells()
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2] is None]
+    assert len(runnable) == 33
+    skipped = {(a, s) for a, s, r in cells if r is not None}
+    assert all(s == "long_500k" for _, s in skipped)
+    assert ("rwkv6-3b", "long_500k") not in skipped       # ssm runs long
+    assert ("jamba-1.5-large-398b", "long_500k") not in skipped
+    assert ("gemma2-2b", "long_500k") not in skipped      # local/global runs
+
+
+def test_shapes():
+    assert SHAPES["train_4k"].lowers == "train_step"
+    assert SHAPES["decode_32k"].lowers == "serve_step"
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_reduction_preserves_family(arch):
+    cfg = get_config(arch)
+    small = reduce_for_smoke(cfg)
+    assert small.family == cfg.family
+    assert small.block_pattern == cfg.block_pattern
+    assert (small.moe is None) == (cfg.moe is None)
+    assert (small.ssm is None) == (cfg.ssm is None)
+    assert small.is_encdec == cfg.is_encdec

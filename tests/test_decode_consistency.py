@@ -1,0 +1,83 @@
+"""The serving-correctness property: prefill(S)+decode == prefill(S+1).
+
+MoE archs run with a large capacity factor: GShard capacity assignment
+depends on the token count, so exact decode==prefill equality only holds
+when no tokens are dropped (drop behavior itself is covered in
+test_layers.test_moe_capacity_drops_tokens).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import (forward_decode, forward_prefill, init_cache,
+                          init_params)
+
+ARCHS = ["llama3.2-1b", "gemma2-2b", "qwen2-7b", "olmoe-1b-7b",
+         "llama-3.2-vision-90b", "rwkv6-3b", "seamless-m4t-medium",
+         "jamba-1.5-large-398b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch, key):
+    cfg = reduce_for_smoke(get_config(arch))
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    params = init_params(cfg, key)
+    B, S = 2, 24
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    extra = {}
+    if cfg.n_image_tokens:
+        extra["img_x"] = jax.random.normal(key, (B, cfg.n_image_tokens,
+                                                 cfg.d_model))
+    if cfg.is_encdec:
+        extra["enc_x"] = jax.random.normal(key, (B, 16, cfg.d_model))
+    src = 16 if cfg.is_encdec else 3072
+
+    ca = init_cache(cfg, B, max_len=32, page_size=8, src_len=src)
+    ref, _ = forward_prefill(cfg, params, {"tokens": toks, **extra}, ca)
+    cb = init_cache(cfg, B, max_len=32, page_size=8, src_len=src)
+    _, cb = forward_prefill(cfg, params, {"tokens": toks[:, :S], **extra}, cb)
+    dec, _ = forward_decode(cfg, params, toks[:, S:S + 1], jnp.int32(S), cb)
+    rel = float(jnp.max(jnp.abs(ref - dec))) / (
+        float(jnp.max(jnp.abs(ref))) + 1e-9)
+    assert rel < 1e-4, rel
+
+
+def test_decode_through_permuted_tables(key):
+    """The SVA property: decode output is invariant to the PHYSICAL page
+    placement (any block-table permutation gives identical logits)."""
+    from repro.models import attention as attn
+
+    cfg = reduce_for_smoke(get_config("llama3.2-1b"))
+    params = init_params(cfg, key)
+    B, S = 2, 24
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+
+    def permute_tables(cache, seed):
+        def walk(tree):
+            if isinstance(tree, attn.PagedKV):
+                bt = tree.block_table
+                n = bt.shape[-1]
+                perms = jnp.stack([
+                    jax.random.permutation(jax.random.key(seed + i), n)
+                    for i in range(bt.shape[-2])])
+                new = jnp.broadcast_to(perms, bt.shape).astype(jnp.int32)
+                return tree._replace(block_table=new)
+            if isinstance(tree, dict):
+                return {k: walk(v) for k, v in tree.items()}
+            return tree
+        return walk(cache)
+
+    outs = []
+    for seed in (0, 123):
+        cache = init_cache(cfg, B, max_len=32, page_size=8)
+        cache = permute_tables(cache, seed) if seed else cache
+        _, cache = forward_prefill(cfg, params, {"tokens": toks[:, :S]}, cache)
+        dec, _ = forward_decode(cfg, params, toks[:, S:S + 1],
+                                jnp.int32(S), cache)
+        outs.append(dec)
+    assert float(jnp.max(jnp.abs(outs[0] - outs[1]))) < 1e-5

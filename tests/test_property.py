@@ -1,0 +1,128 @@
+"""Hypothesis property tests on the system's invariants (deliverable c)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.simulator.run import simulate_kernel
+from repro.core.sva.page_pool import OutOfPages, PagePool
+from repro.core.sva.tlb import TranslationCache
+from repro.kernels.mergesort.ops import mergesort
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 6)), min_size=1,
+                max_size=60))
+def test_page_pool_invariants(ops):
+    """Alloc/free/share in any order never corrupts refcounts or the free
+    list; allocations are unique live pages."""
+    pool = PagePool(n_pages=24, page_size=64)
+    live = []
+    for is_alloc, n in ops:
+        if is_alloc:
+            try:
+                pages = pool.alloc(n)
+            except OutOfPages:
+                assert pool.n_free < n
+                continue
+            assert len(set(pages)) == n
+            for p in pages:
+                assert pool.refcount(p) == 1
+            live.append(pages)
+        elif live:
+            pool.free(live.pop())
+        pool.check_invariants()
+    for pages in live:
+        pool.free(pages)
+    pool.check_invariants()
+    assert pool.n_free == 24
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 64), st.integers(1, 16))
+def test_prefix_sharing_refcounts(n_pages, shared):
+    pool = PagePool(n_pages=n_pages + 16, page_size=64)
+    a = pool.alloc(n_pages)
+    shared = min(shared, n_pages)
+    pool.share(a[:shared])
+    pool.free(a)                      # owner releases everything
+    for p in a[:shared]:
+        assert pool.refcount(p) == 1  # prefix still alive via the sharer
+    pool.free(a[:shared])
+    pool.check_invariants()
+    assert pool.n_free == pool.n_pages
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=200),
+       st.integers(1, 8))
+def test_tlb_lru(refs, entries):
+    """The LRU cache never exceeds capacity and hit => previously filled."""
+    tlb = TranslationCache(entries)
+    filled = set()
+    for r in refs:
+        val, hit = tlb.lookup(r)
+        if hit:
+            assert r in filled
+            assert val == r * 7
+        else:
+            tlb.fill(r, r * 7)
+            filled.add(r)
+        assert len(tlb) <= entries
+    tlb.invalidate()
+    assert len(tlb) == 0
+    assert tlb.lookup(refs[0])[1] is False
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 256, 1024]))
+def test_mergesort_is_sorted_permutation(seed, n):
+    x = jax.random.normal(jax.random.key(seed), (n,))
+    out = np.asarray(mergesort(x, block=min(64, n)))
+    xs = np.asarray(x)
+    assert np.all(np.diff(out) >= 0)
+    assert np.array_equal(np.sort(xs), out)
+
+
+@settings(**SETTINGS)
+@given(st.sampled_from(["gemm", "gesummv", "heat3d", "mergesort"]),
+       st.sampled_from(["baseline", "iommu", "iommu_llc"]))
+def test_simulator_monotonic_in_latency(kernel, config):
+    """Runtime never decreases with DRAM latency; IOMMU never beats baseline;
+    the LLC never hurts the IOMMU config."""
+    ts = [simulate_kernel(kernel, config, lat).total
+          for lat in (200, 400, 600, 800, 1000)]
+    assert all(b >= a * 0.999 for a, b in zip(ts, ts[1:]))
+    for lat in (200, 600, 1000):
+        base = simulate_kernel(kernel, "baseline", lat).total
+        iommu = simulate_kernel(kernel, "iommu", lat).total
+        llc = simulate_kernel(kernel, "iommu_llc", lat).total
+        assert iommu >= base * 0.999
+        assert llc <= iommu * 1.001
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1))
+def test_paged_attention_table_permutation_invariance(seed):
+    """softmax attention through ANY page permutation == identity placement
+    (the zero-copy property: physical placement never changes results)."""
+    kk = jax.random.split(jax.random.key(seed), 5)
+    B, Hq, Hkv, P, T, D = 2, 4, 2, 4, 8, 16
+    q = jax.random.normal(kk[0], (B, Hq, D))
+    kp = jax.random.normal(kk[1], (B, P, T, Hkv, D))
+    vp = jax.random.normal(kk[2], (B, P, T, Hkv, D))
+    lens = jnp.asarray([P * T, P * T // 2], jnp.int32)
+    ident = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P))
+    perm = jnp.stack([jax.random.permutation(k2, P)
+                      for k2 in jax.random.split(kk[3], B)]).astype(jnp.int32)
+    # permute the physical pages consistently with the table
+    inv = jnp.argsort(perm, axis=1)
+    kp2 = jnp.take_along_axis(kp, inv[:, :, None, None, None], axis=1)
+    vp2 = jnp.take_along_axis(vp, inv[:, :, None, None, None], axis=1)
+    o1 = paged_attention_ref(q, kp, vp, ident, lens)
+    o2 = paged_attention_ref(q, kp2, vp2, perm, lens)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
