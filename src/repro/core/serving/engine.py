@@ -1,10 +1,23 @@
 """Continuous-batching serving engine over the paged SVA layer.
 
-Zero-copy offload at serving granularity: admission writes block-table rows
-(ints), prefill produces KV directly into the mapped pages through the block
-table, decode walks the same tables. ``offload_mode="copy"`` instead pays a
-modeled staging copy per admission (the paper's baseline), so the two modes
-can be benchmarked against each other like Fig. 2.
+Zero-copy offload at serving granularity (the paper's map-don't-copy
+result applied to KV admission):
+
+  zero_copy  ONE global physical page pool is shared by every batch slot
+             (per KV layer). Admission writes block-table rows (ints) and a
+             single batched/bucketed prefill call scatters KV **directly
+             into the shared pool through those tables** — no per-request
+             cache materialization, no staging copy, no slot-by-slot tree
+             walk. Decode consumes **delta table uploads**: only rows whose
+             tables changed since the last step are re-sent
+             (``PagedKVManager.delta_rows()``), with a full-table upload
+             only on epoch invalidation — the serving-level analogue of a
+             warm IOTLB.
+
+  copy       The staging baseline (paper Fig. 2's memcpy mode): every
+             admission materializes a fresh single-sequence cache, prefills
+             into it, physically duplicates it, and copies it leaf-by-leaf
+             into the batch cache.
 
 CPU-testable with reduced configs; the same engine drives TPU meshes by
 passing a MeshInfo.
@@ -25,7 +38,7 @@ from repro.core.sva.kv_manager import PagedKVManager
 from repro.models import (MeshInfo, NO_MESH, forward_decode, forward_prefill,
                           init_cache)
 from repro.models import attention as attn
-from repro.models.model import set_cache_length
+from repro.models.blocks import MAMBA_KINDS, _sp_mode
 
 
 @dataclass
@@ -39,17 +52,29 @@ class Request:
     done_at: Optional[float] = None
 
 
+# ------------------------------------------------------------ cache walks
+
 def _map_tables(cache, tables: np.ndarray, lengths: np.ndarray):
-    """Install manager block tables + per-seq lengths into a cache pytree."""
-    t = jnp.asarray(tables)
+    """Install per-slot block tables + lengths into a PER-SLOT-layout cache
+    pytree (the copy-baseline path). Rejects — instead of silently wrapping —
+    table entries that exceed a leaf's pool (sliding-window leaves have
+    fewer pages than the manager row): wrapping page indices aliases
+    distinct logical pages onto one physical page and corrupts KV."""
+    t_np = np.asarray(tables)
     ln = jnp.asarray(lengths)
 
     def walk(tree):
         if isinstance(tree, attn.PagedKV):
             bt = tree.block_table
             n_pages = bt.shape[-1]
-            tt = t[..., :n_pages] % max(n_pages, 1)
-            tt = jnp.broadcast_to(tt, bt.shape).astype(jnp.int32)
+            sub = t_np[..., :n_pages]
+            if sub.size and int(sub.max()) >= n_pages:
+                raise ValueError(
+                    f"block-table entry {int(sub.max())} out of range for a "
+                    f"{n_pages}-page pool (sliding-window leaf); refusing to "
+                    "wrap page indices — serve this config in zero_copy "
+                    "mode, which gives window layers per-slot ring buffers")
+            tt = jnp.broadcast_to(jnp.asarray(sub), bt.shape).astype(jnp.int32)
             return tree._replace(block_table=tt,
                                  length=jnp.broadcast_to(ln, tree.length.shape)
                                  .astype(jnp.int32))
@@ -60,7 +85,8 @@ def _map_tables(cache, tables: np.ndarray, lengths: np.ndarray):
 
 
 def _write_slot(batch_cache, single_cache, slot: int):
-    """Copy one sequence's prefilled cache into batch slot ``slot``.
+    """Copy one sequence's prefilled cache into batch slot ``slot`` (the
+    staging-copy baseline's O(cache-size) admission walk).
 
     Leaves under 'blocks' carry a leading (n_blocks,) axis -> batch axis 1;
     everything else has batch axis 0.
@@ -84,6 +110,91 @@ def _write_slot(batch_cache, single_cache, slot: int):
     return walk(batch_cache, single_cache, False)
 
 
+def _build_prefill_view(cache, tables: jax.Array, lengths: jax.Array):
+    """Per-admission view of the shared batch cache for a batched prefill of
+    ``Nb = tables.shape[0]`` new sequences.
+
+    Global-pool leaves keep THE SAME pool arrays (KV lands in place through
+    the tables — zero-copy); per-slot leaves (sliding-window rings,
+    recurrent states, cross-KV) become fresh zero rows that are scattered
+    back to their slots afterwards. All of this traces inside one jit: no
+    host-side cache materialization per admission.
+    """
+    nb = tables.shape[0]
+
+    def walk(tree, under_blocks):
+        if isinstance(tree, attn.PagedKV):
+            lead = tree.block_table.shape[:tree.block_table.ndim - 2]
+            if attn.is_global_layout(tree):
+                return tree._replace(
+                    block_table=jnp.broadcast_to(tables, lead + tables.shape),
+                    length=jnp.broadcast_to(lengths, lead + lengths.shape))
+            n_pages = tree.block_table.shape[-1]
+            pool_tail = tree.k_pool.shape[len(lead) + 1:]
+            kz = jnp.zeros(lead + (nb,) + pool_tail, tree.k_pool.dtype)
+            iota = jnp.broadcast_to(jnp.arange(n_pages, dtype=jnp.int32),
+                                    lead + (nb, n_pages))
+            return attn.PagedKV(
+                k_pool=kz, v_pool=kz, block_table=iota,
+                length=jnp.zeros(lead + (nb,), tree.length.dtype))
+        if isinstance(tree, dict):
+            return {k: walk(v, under_blocks or k == "blocks")
+                    for k, v in tree.items()}
+        if isinstance(tree, tuple) and hasattr(tree, "_fields"):
+            return type(tree)(*(walk(v, under_blocks) for v in tree))
+        ax = 1 if under_blocks and tree.ndim >= 2 else 0
+        shape = tree.shape[:ax] + (nb,) + tree.shape[ax + 1:]
+        return jnp.zeros(shape, tree.dtype)
+    return walk(cache, False)
+
+
+def _merge_prefill_view(cache, view, slots: jax.Array):
+    """Fold a prefilled view back into the batch cache. Global-pool leaves
+    were written in place (just adopt the updated pool arrays); per-slot
+    leaves scatter their rows to ``slots`` (out-of-bounds padding rows are
+    dropped)."""
+    def walk(c, w, under_blocks):
+        if isinstance(c, attn.PagedKV):
+            if attn.is_global_layout(c):
+                return c._replace(k_pool=w.k_pool, v_pool=w.v_pool)
+            lead_n = c.block_table.ndim - 2
+            def scat(dst, src):
+                if lead_n:
+                    return dst.at[:, slots].set(src.astype(dst.dtype),
+                                                mode="drop")
+                return dst.at[slots].set(src.astype(dst.dtype), mode="drop")
+            return c._replace(k_pool=scat(c.k_pool, w.k_pool),
+                              v_pool=scat(c.v_pool, w.v_pool))
+        if isinstance(c, dict):
+            return {k: walk(c[k], w[k], under_blocks or k == "blocks")
+                    for k in c}
+        if isinstance(c, tuple) and hasattr(c, "_fields"):
+            return type(c)(*(walk(a, b, under_blocks) for a, b in zip(c, w)))
+        ax = 1 if under_blocks and c.ndim >= 2 else 0
+        if ax == 0:
+            return c.at[slots].set(w.astype(c.dtype), mode="drop")
+        return c.at[:, slots].set(w.astype(c.dtype), mode="drop")
+    return walk(cache, view, False)
+
+
+def _install_tables(cache, tables: jax.Array, lengths: jax.Array):
+    """Per-decode-step install of the device-resident table array + current
+    per-slot lengths into a GLOBAL-layout cache (pure leaf replacement
+    inside jit — the host uploaded at most the delta rows)."""
+    def walk(tree):
+        if isinstance(tree, attn.PagedKV):
+            ln = jnp.broadcast_to(lengths, tree.length.shape).astype(jnp.int32)
+            if attn.is_global_layout(tree):
+                bt = jnp.broadcast_to(tables, tree.block_table.shape) \
+                    .astype(jnp.int32)
+                return tree._replace(block_table=bt, length=ln)
+            return tree._replace(length=ln)     # window ring: identity table
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items()}
+        return tree
+    return walk(cache)
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, n_slots: int, max_len: int,
                  page_size: int = 8, mi: MeshInfo = NO_MESH,
@@ -93,29 +204,67 @@ class ServingEngine:
         self.n_slots, self.max_len, self.page_size = n_slots, max_len, page_size
         self.src_len = src_len
         self.eos = eos_token
+        self.max_pages = -(-max_len // page_size)
         kv_bytes = (2 * cfg.n_kv_heads * cfg.d_head
                     * sum(1 for k in cfg.layer_kinds() if "attn" in k or k == "cross_mlp")
                     * jnp.dtype(cfg.activation_dtype).itemsize)
-        self.mgr = PagedKVManager(n_slots, -(-max_len // page_size), page_size,
+        self.offload_mode = offload_mode
+        self.mgr = PagedKVManager(n_slots, self.max_pages, page_size,
                                   kv_bytes_per_token=kv_bytes,
                                   offload_mode=offload_mode)
-        self.cache = init_cache(cfg, n_slots, max_len, page_size,
-                                src_len=src_len, per_seq=True)
         self.queue: deque = deque()
         self.active: Dict[int, Request] = {}
         self._next_id = 0
-        self.offload_mode = offload_mode
-        self.metrics = {"prefills": 0, "decode_steps": 0, "tokens": 0,
-                        "staging_copies": 0, "prefill_s": 0.0, "decode_s": 0.0,
-                        "admit_s": 0.0}
+        # Recurrent layers (mamba/rwkv) scan left-to-right: right-padding
+        # would corrupt their final states, so those archs prefill at exact
+        # lengths (batching only same-length prompts).
+        self._exact_prefill = any(k in MAMBA_KINDS or k == "rwkv"
+                                  for k in cfg.layer_kinds())
+        self.metrics = {"prefills": 0, "prefill_reqs": 0, "decode_steps": 0,
+                        "tokens": 0, "staging_copies": 0, "prefill_s": 0.0,
+                        "decode_s": 0.0, "admit_s": 0.0,
+                        "table_uploads_full": 0, "table_uploads_delta": 0,
+                        "table_rows_uploaded": 0, "table_upload_bytes": 0,
+                        "admit_table_bytes": 0}
 
-        self._decode = jax.jit(
-            lambda p, t, pos, c: forward_decode(cfg, p, t, pos, c, mi))
-        self._prefill = jax.jit(
-            lambda p, b, c: forward_prefill(cfg, p, b, c, mi))
+        if offload_mode == "zero_copy":
+            if _sp_mode(cfg, n_slots, max_len):
+                raise NotImplementedError(
+                    "zero_copy serving does not support the SP cache layout")
+            self.null_page = n_slots * self.max_pages
+            self.cache = init_cache(cfg, n_slots, max_len, page_size,
+                                    src_len=src_len, per_seq=True,
+                                    global_pages=self.null_page)
+            self._tables_dev = jnp.full((n_slots, self.max_pages),
+                                        self.null_page, jnp.int32)
+            self._epoch_seen = -1
+            self._prefill = jax.jit(self._prefill_zero_copy,
+                                    donate_argnums=(2,))
+            self._decode = jax.jit(self._decode_zero_copy,
+                                   donate_argnums=(4,))
+        else:
+            if (cfg.sliding_window
+                    and any(k == "attn_mlp_local" for k in cfg.layer_kinds())
+                    and -(-min(max_len, cfg.sliding_window) // page_size)
+                    < self.max_pages):
+                # Fail fast: per-slot window leaves have fewer pages than a
+                # manager table row, so _map_tables would reject every
+                # admission mid-run (data-dependent) — reject at
+                # construction instead.
+                raise NotImplementedError(
+                    "copy-mode serving cannot map block-table rows onto "
+                    "sliding-window leaves (fewer pages than the slot "
+                    "table); serve this config with offload_mode='zero_copy'")
+            self.cache = init_cache(cfg, n_slots, max_len, page_size,
+                                    src_len=src_len, per_seq=True)
+            self._decode = jax.jit(
+                lambda p, t, pos, c: forward_decode(cfg, p, t, pos, c, mi))
+            self._prefill = jax.jit(
+                lambda p, b, c: forward_prefill(cfg, p, b, c, mi))
 
     # --------------------------------------------------------------- API
     def submit(self, prompt: List[int], max_tokens: int = 16) -> int:
+        self.mgr.ensure_fits(len(prompt), max_tokens)   # reject, never wrap
         rid = self._next_id
         self._next_id += 1
         self.queue.append(Request(rid, list(prompt), max_tokens,
@@ -138,26 +287,111 @@ class ServingEngine:
                 finished[rid] = req
         return finished
 
-    # --------------------------------------------------------------- internals
+    def invalidate_epoch(self) -> None:
+        """Flush every device translation (paper Listing 1); the next decode
+        step performs a full-table upload."""
+        self.mgr.invalidate_epoch()
+
+    # --------------------------------------------------------------- admission
     def _admit(self):
+        admitted = []
         while self.queue:
             req = self.queue[0]
             t0 = time.perf_counter()
             st = self.mgr.admit(req.req_id, len(req.prompt), req.max_tokens)
+            self.metrics["admit_s"] += time.perf_counter() - t0
             if st is None:
                 break                      # no slot/pages: continuous batching waits
             self.queue.popleft()
-            self.metrics["admit_s"] += time.perf_counter() - t0
-            self._prefill_into_slot(req, st.slot)
+            admitted.append((req, st))
+        if not admitted:
+            return
+        if self.offload_mode == "copy":
+            for req, st in admitted:
+                self._prefill_into_slot(req, st.slot)
+                self.active[req.req_id] = req
+            return
+        if self._exact_prefill:
+            groups: Dict[int, list] = {}
+            for item in admitted:
+                groups.setdefault(len(item[0].prompt), []).append(item)
+            for group in groups.values():
+                self._batched_prefill(group)
+        else:
+            self._batched_prefill(admitted)
+        for req, st in admitted:
             self.active[req.req_id] = req
 
+    def _bucket_len(self, longest: int) -> int:
+        """Power-of-two token bucket (stable jit cache keys), capped at slot
+        capacity."""
+        lb = self.page_size
+        while lb < longest:
+            lb *= 2
+        return min(lb, self.max_pages * self.page_size)
+
+    def _batched_prefill(self, group):
+        """ONE padded prefill call for all newly admitted requests: KV is
+        scattered straight into the shared global pool through the admitted
+        rows' block tables. Admission's host->device traffic is the token
+        ids plus int32 table entries — not KV bytes."""
+        t0 = time.perf_counter()
+        plens = [len(req.prompt) for req, _ in group]
+        lb = max(plens) if self._exact_prefill else self._bucket_len(max(plens))
+        nb = 1
+        while nb < len(group):
+            nb *= 2
+        nb = max(min(nb, self.n_slots), len(group))
+        tokens = np.zeros((nb, lb), np.int32)
+        lengths = np.zeros((nb,), np.int32)
+        slots = np.full((nb,), self.n_slots, np.int32)   # OOB: scatter-dropped
+        tables = np.full((nb, self.max_pages), self.mgr.null_page, np.int32)
+        for i, (req, st) in enumerate(group):
+            tokens[i, :len(req.prompt)] = req.prompt
+            lengths[i] = len(req.prompt)
+            slots[i] = st.slot
+            tables[i] = self.mgr.tables[st.slot]
+        # Admission upload accounting: only the REAL rows' table entries
+        # (padding rows exist for jit-key stability, not data movement).
+        self.metrics["admit_table_bytes"] += len(group) * self.max_pages * 4
+        batch = {"tokens": jnp.asarray(tokens),
+                 "lengths": jnp.asarray(lengths),
+                 "tables": jnp.asarray(tables),
+                 "slots": jnp.asarray(slots)}
+        logits, self.cache = self._prefill(self.params, batch, self.cache)
+        logits = np.asarray(logits)
+        now = time.perf_counter()
+        for i, (req, st) in enumerate(group):
+            first = int(np.argmax(logits[i, -1]))
+            self.mgr.append_token(req.req_id, first)
+            req.first_token_at = now
+        self.metrics["prefills"] += 1
+        self.metrics["prefill_reqs"] += len(group)
+        self.metrics["prefill_s"] += time.perf_counter() - t0
+
+    def _prefill_zero_copy(self, params, batch, cache):
+        cfg = self.cfg
+        view = _build_prefill_view(cache, batch["tables"], batch["lengths"])
+        fb = {"tokens": batch["tokens"], "lengths": batch["lengths"]}
+        nb = batch["tokens"].shape[0]
+        if cfg.is_encdec:
+            fb["enc_x"] = jnp.zeros((nb, self.src_len, cfg.d_model),
+                                    jnp.dtype(cfg.activation_dtype))
+        elif cfg.n_image_tokens:
+            fb["img_x"] = jnp.zeros((nb, cfg.n_image_tokens, cfg.d_model),
+                                    jnp.dtype(cfg.activation_dtype))
+        logits, view = forward_prefill(cfg, params, fb, view, self.mi)
+        cache = _merge_prefill_view(cache, view, batch["slots"])
+        return logits, cache
+
     def _prefill_into_slot(self, req: Request, slot: int):
+        """Copy-mode baseline: materialize a fresh single-sequence cache,
+        prefill it, physically duplicate it (the staging copy), then walk it
+        leaf-by-leaf into the batch cache."""
         t0 = time.perf_counter()
         cfg = self.cfg
         single = init_cache(cfg, 1, self.max_len, self.page_size,
                             src_len=self.src_len, per_seq=True)
-        # install this sequence's REAL page mapping before prefill: the
-        # prefill scatter writes KV through the block table (zero-copy).
         row = self.mgr.tables[slot:slot + 1]
         single = _map_tables(single, row, np.zeros(1, np.int32))
         toks = jnp.asarray(req.prompt, jnp.int32)[None]
@@ -169,35 +403,71 @@ class ServingEngine:
             batch["img_x"] = jnp.zeros((1, cfg.n_image_tokens, cfg.d_model),
                                        jnp.dtype(cfg.activation_dtype))
         logits, single = self._prefill(self.params, batch, single)
-        if self.offload_mode == "copy":
-            # staging copy baseline: physically duplicate the KV pools once
-            single = jax.tree.map(lambda x: x + 0, single)
-            self.metrics["staging_copies"] += 1
+        # staging copy baseline: physically duplicate the KV pools once
+        single = jax.tree.map(lambda x: x + 0, single)
+        self.metrics["staging_copies"] += 1
         self.cache = _write_slot(self.cache, single, slot)
         first = int(jnp.argmax(logits[0, -1]))
         self.mgr.append_token(req.req_id, first)
         req.first_token_at = time.perf_counter()
         self.metrics["prefills"] += 1
+        self.metrics["prefill_reqs"] += 1
         self.metrics["prefill_s"] += time.perf_counter() - t0
+
+    # --------------------------------------------------------------- decode
+    def _upload_tables(self):
+        """Delta table upload: send only rows that changed since last step;
+        a full-table upload happens only after an epoch invalidation."""
+        if self.mgr.epoch != self._epoch_seen:
+            self.mgr.delta_rows()                    # superseded by the full upload
+            self._tables_dev = jnp.asarray(self.mgr.tables)
+            self._epoch_seen = self.mgr.epoch
+            self.metrics["table_uploads_full"] += 1
+            self.metrics["table_rows_uploaded"] += self.n_slots
+            self.metrics["table_upload_bytes"] += int(self.mgr.tables.nbytes)
+            return
+        rows = self.mgr.delta_rows()
+        if rows:
+            idx = np.asarray(rows)
+            sub = self.mgr.tables[idx]
+            self._tables_dev = self._tables_dev.at[jnp.asarray(idx)].set(
+                jnp.asarray(sub))
+            self.metrics["table_uploads_delta"] += 1
+            self.metrics["table_rows_uploaded"] += len(rows)
+            self.metrics["table_upload_bytes"] += int(sub.nbytes)
+
+    def _decode_zero_copy(self, params, tokens, kv_len, tables, cache):
+        cache = _install_tables(cache, tables, kv_len)
+        return forward_decode(self.cfg, params, tokens, kv_len, cache, self.mi)
 
     def _decode_step(self):
         if not self.active:
             return
         t0 = time.perf_counter()
         lengths = self.mgr.device_lengths()
-        tables = self.mgr.device_tables()
         # KV length = tokens whose KV is in cache; exactly one token is
         # pending per active sequence (the one this step feeds in).
         kv_len = np.maximum(lengths - 1, 0).astype(np.int32)
-        self.cache = _map_tables(self.cache, tables, kv_len)
         last = np.zeros((self.n_slots, 1), np.int32)
         for rid, req in self.active.items():
             st = self.mgr.seqs[rid]
             last[st.slot, 0] = st.tokens[-1] if st.tokens else \
                 (req.prompt[-1] if req.prompt else 0)
         pos = jnp.asarray(kv_len)                       # write/rope position
-        logits, self.cache = self._decode(self.params, jnp.asarray(last),
-                                          pos, self.cache)
+        if self.offload_mode == "zero_copy":
+            self._upload_tables()
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(last), pos, self._tables_dev,
+                self.cache)
+        else:
+            # copy baseline: full table re-upload + re-map every step
+            tables = self.mgr.device_tables()
+            self.cache = _map_tables(self.cache, tables, kv_len)
+            self.metrics["table_uploads_full"] += 1
+            self.metrics["table_rows_uploaded"] += self.n_slots
+            self.metrics["table_upload_bytes"] += int(tables.nbytes)
+            logits, self.cache = self._decode(self.params, jnp.asarray(last),
+                                              pos, self.cache)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for rid in list(self.active):
             st = self.mgr.seqs[rid]

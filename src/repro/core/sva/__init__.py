@@ -1,7 +1,8 @@
-from repro.core.sva.kv_manager import PagedKVManager, SeqState
+from repro.core.sva.kv_manager import (CapacityError, PagedKVManager,
+                                       SeqState)
 from repro.core.sva.mapping import Mapping, SVASpace, SVAStats
 from repro.core.sva.page_pool import OutOfPages, PagePool, PoolStats
 from repro.core.sva.tlb import TLBStats, TranslationCache
 
-__all__ = ["Mapping", "OutOfPages", "PagePool", "PagedKVManager", "PoolStats",
+__all__ = ["CapacityError", "Mapping", "OutOfPages", "PagePool", "PagedKVManager", "PoolStats",
            "SVASpace", "SVAStats", "SeqState", "TLBStats", "TranslationCache"]

@@ -1,18 +1,26 @@
 """Paged KV-cache manager: binds the SVA layer to the compiled model's
-per-slot cache view.
+cache view.
 
-The compiled decode step sees, per batch slot, a page pool row of
-``max_pages`` pages and an int32 block table (see models/attention.PagedKV).
-This manager owns the *global* allocation state: which physical page of a
-slot's row backs which logical page of the sequence, prefix sharing,
-eviction, and the delta-upload bookkeeping through the translation cache.
+Two layouts:
 
-Zero-copy vs copy admission (paper Fig. 2, at serving granularity):
-  zero_copy — admission writes table rows only; KV data is produced in
-              place by prefill.
-  copy      — admission is modeled as a physical re-copy of the prompt's KV
-              into slot-contiguous pages (tracked in stats.bytes_copied and
-              charged on-device by the benchmark harness).
+  global   (zero-copy serving) ONE PagePool shared by every slot. The
+           compiled step sees a single physical page pool per KV layer
+           (``n_slots * max_pages`` pages) and per-slot int32 block tables
+           indexing into it. Unallocated table entries hold the NULL page id
+           (== total page count): device writes through them are dropped and
+           gathers read as zero. Admission writes table rows only — KV data
+           is produced in place by the batched prefill scatter.
+
+  per_slot (copy baseline) one PagePool per slot; each table row is a
+           permutation of [0, max_pages) over that slot's private pool. This
+           is the layout the staging-copy admission path (the paper's
+           baseline) uses.
+
+Delta-upload bookkeeping: rows whose tables changed since the last device
+upload accumulate in ``dirty_rows`` and are drained with ``delta_rows()`` —
+the serving-level analogue of a warm IOTLB. ``invalidate_epoch()`` models
+the paper's Listing-1 flush: every translation dies and the next upload must
+be a full-table upload.
 """
 from __future__ import annotations
 
@@ -26,62 +34,104 @@ from repro.core.sva.page_pool import OutOfPages, PagePool
 from repro.core.sva.tlb import TranslationCache
 
 
+class CapacityError(ValueError):
+    """Request can NEVER be admitted (prompt+max_tokens exceeds slot
+    capacity) — distinct from a transient OutOfPages/no-slot condition."""
+
+
 @dataclass
 class SeqState:
     seq_id: int
     slot: int
     length: int                   # tokens in cache
-    pages: List[int]              # physical pages (slot-row indices)
+    pages: List[int]              # physical page ids
     max_tokens: int
     tokens: List[int] = field(default_factory=list)   # generated so far
     done: bool = False
 
 
 class PagedKVManager:
-    """Per-slot page allocation + block tables for a fixed-B decode step."""
+    """Page allocation + block tables for a fixed-B decode step."""
 
     def __init__(self, n_slots: int, max_pages_per_slot: int, page_size: int,
-                 kv_bytes_per_token: int = 0, offload_mode: str = "zero_copy"):
+                 kv_bytes_per_token: int = 0, offload_mode: str = "zero_copy",
+                 layout: Optional[str] = None):
         assert offload_mode in ("zero_copy", "copy")
+        if layout is None:
+            layout = "global" if offload_mode == "zero_copy" else "per_slot"
+        assert layout in ("global", "per_slot")
         self.n_slots = n_slots
         self.max_pages = max_pages_per_slot
         self.page_size = page_size
         self.kv_bytes_per_token = kv_bytes_per_token
         self.offload_mode = offload_mode
-        # One pool per slot (the compiled step's pool rows are per-slot);
-        # a single SVASpace tracks stats across all of them.
-        self.pools = [PagePool(max_pages_per_slot, page_size)
-                      for _ in range(n_slots)]
+        self.layout = layout
+        self.total_pages = n_slots * max_pages_per_slot
+        self.null_page = self.total_pages            # device drop/zero sentinel
+        if layout == "global":
+            self.pool = PagePool(self.total_pages, page_size)
+            self.pools = None
+            self.tables = np.full((n_slots, max_pages_per_slot),
+                                  self.null_page, np.int32)
+        else:
+            # One pool per slot (the compiled step's pool rows are per-slot).
+            self.pools = [PagePool(max_pages_per_slot, page_size)
+                          for _ in range(n_slots)]
+            self.pool = None
+            self.tables = np.zeros((n_slots, max_pages_per_slot), np.int32)
         self.space = SVASpace(PagePool(1, page_size))   # stats aggregator
         self.tlb = TranslationCache(n_entries=4096)
         self.free_slots = list(range(n_slots - 1, -1, -1))
         self.seqs: Dict[int, SeqState] = {}
-        self.tables = np.zeros((n_slots, max_pages_per_slot), np.int32)
         self.lengths = np.zeros((n_slots,), np.int32)
         self.dirty_rows = set(range(n_slots))
+        self.epoch = 0
 
     # ------------------------------------------------------------ admission
+    def ensure_fits(self, prompt_len: int, max_tokens: int) -> int:
+        """Single source of truth for the slot-capacity check (used by both
+        ``admit`` and the engine's ``submit``). Returns the page count
+        needed; raises :class:`CapacityError` when the request can never
+        fit — silently truncating the reservation would later wrap page
+        indices and corrupt other sequences' KV."""
+        need = -(-(prompt_len + max_tokens) // self.page_size)
+        if need > self.max_pages:
+            raise CapacityError(
+                f"prompt_len={prompt_len} + max_tokens={max_tokens} needs "
+                f"{need} pages but a slot holds {self.max_pages} "
+                f"({self.max_pages * self.page_size} tokens)")
+        return need
+
     def admit(self, seq_id: int, prompt_len: int, max_tokens: int
               ) -> Optional[SeqState]:
-        """Allocate a slot + pages for a prompt; None if no slot free."""
+        """Allocate a slot + pages for a prompt.
+
+        Returns None when no slot/pages are free right now (continuous
+        batching waits); raises :class:`CapacityError` for requests that can
+        never fit (see ``ensure_fits``).
+        """
+        need = self.ensure_fits(prompt_len, max_tokens)
         if not self.free_slots:
             return None
-        need = -(-(prompt_len + max_tokens) // self.page_size)
-        need = min(need, self.max_pages)
         slot = self.free_slots[-1]
-        pool = self.pools[slot]
+        alloc_pool = self.pool if self.layout == "global" else self.pools[slot]
         try:
-            pages = pool.alloc(need)
+            pages = alloc_pool.alloc(need)
         except OutOfPages:
             return None
         self.free_slots.pop()
         st = SeqState(seq_id, slot, prompt_len, pages, max_tokens)
         self.seqs[seq_id] = st
-        # Row is kept a PERMUTATION of [0, max_pages): allocated pages first,
-        # remaining physical pages as filler — prefill's scatter inverts it.
-        used = set(pages)
-        filler = [p for p in range(self.max_pages) if p not in used]
-        row = np.asarray(pages + filler, np.int32)
+        if self.layout == "global":
+            row = np.full((self.max_pages,), self.null_page, np.int32)
+            row[:need] = pages
+        else:
+            # Row is kept a PERMUTATION of [0, max_pages): allocated pages
+            # first, remaining physical pages as filler — the per-slot
+            # prefill scatter inverts it.
+            used = set(pages)
+            filler = [p for p in range(self.max_pages) if p not in used]
+            row = np.asarray(pages + filler, np.int32)
         self.tables[slot] = row
         self.lengths[slot] = prompt_len
         self.dirty_rows.add(slot)
@@ -100,14 +150,25 @@ class PagedKVManager:
         st.length += 1
         self.lengths[st.slot] = st.length
         needed = -(-st.length // self.page_size)
-        if needed > len(st.pages) and len(st.pages) < self.max_pages:
-            new = self.pools[st.slot].alloc(1)
+        if needed > len(st.pages):
+            # Admission reserves prompt+max_tokens upfront, so this only
+            # fires for callers that under-reserved; grow or fail loudly.
+            if len(st.pages) >= self.max_pages:
+                raise CapacityError(
+                    f"seq {seq_id} grew past its slot capacity "
+                    f"({self.max_pages} pages)")
+            alloc_pool = (self.pool if self.layout == "global"
+                          else self.pools[st.slot])
+            new = alloc_pool.alloc(1)
             lp = len(st.pages)
             st.pages.extend(new)
-            # swap to keep the row a permutation
-            row = self.tables[st.slot]
-            j = int(np.where(row == new[0])[0][0])
-            row[lp], row[j] = row[j], row[lp]
+            if self.layout == "global":
+                self.tables[st.slot, lp] = new[0]
+            else:
+                # swap to keep the row a permutation
+                row = self.tables[st.slot]
+                j = int(np.where(row == new[0])[0][0])
+                row[lp], row[j] = row[j], row[lp]
             self.dirty_rows.add(st.slot)
             self.space.stats.table_entries_written += 1
             self.tlb.fill((st.slot, lp), new[0])
@@ -116,9 +177,13 @@ class PagedKVManager:
 
     def release(self, seq_id: int) -> None:
         st = self.seqs.pop(seq_id)
-        self.pools[st.slot].free(st.pages)
+        free_pool = (self.pool if self.layout == "global"
+                     else self.pools[st.slot])
+        free_pool.free(st.pages)
         self.free_slots.append(st.slot)
         self.lengths[st.slot] = 0
+        if self.layout == "global":
+            self.tables[st.slot] = self.null_page
         self.space.stats.unmap_calls += 1
         # self-invalidation (paper Listing 1): translations for this slot die
         for lp in range(len(st.pages)):
@@ -133,6 +198,13 @@ class PagedKVManager:
         self.dirty_rows.clear()
         return rows
 
+    def invalidate_epoch(self) -> None:
+        """Full translation flush (paper Listing 1): the next device upload
+        must re-send every table row."""
+        self.tlb.invalidate()
+        self.epoch += 1
+        self.dirty_rows.update(range(self.n_slots))
+
     def device_tables(self) -> np.ndarray:
         return self.tables.copy()
 
@@ -143,7 +215,15 @@ class PagedKVManager:
         return [s for s in self.seqs.values() if not s.done]
 
     def stats(self) -> dict:
+        pools = [self.pool] if self.layout == "global" else self.pools
+        used = sum(p.n_used for p in pools)
+        free = sum(p.n_free for p in pools)
+        high = sum(p.stats.high_water for p in pools)
+        util = (sum(p.utilization * p.n_pages for p in pools)
+                / max(sum(p.n_pages for p in pools), 1))
         return {"sva": self.space.stats.as_dict(),
                 "tlb": self.tlb.stats.as_dict(),
-                "pool_used": sum(p.n_used for p in self.pools),
-                "pool_free": sum(p.n_free for p in self.pools)}
+                "pool_used": used,
+                "pool_free": free,
+                "pool_high_water": high,
+                "pool_utilization": round(util, 4)}

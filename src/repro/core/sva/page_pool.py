@@ -5,6 +5,10 @@ mode sequences get *mapped* pages (an IOVA range backed by whatever physical
 pages are free); in ``copy`` mode admission additionally models the staging
 copy into a physically-contiguous region (the paper's baseline).
 
+One instance now typically backs the GLOBAL pool shared by every serving
+slot (see core/sva/kv_manager.py), so utilization/high-water stats here are
+the fleet-level memory signal, not a per-slot one.
+
 Pure host-side bookkeeping (numpy/ints); the device arrays live in the
 compiled step's paged pools. Reference counting enables prefix sharing
 (multiple sequences mapping the same physical page, RadixAttention-style).
@@ -81,6 +85,11 @@ class PagePool:
 
     def refcount(self, page: int) -> int:
         return int(self._ref[page])
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of pages currently mapped (global-pool pressure gauge)."""
+        return self.n_used / self.n_pages if self.n_pages else 0.0
 
     def check_invariants(self) -> None:
         free_set = set(self._free)

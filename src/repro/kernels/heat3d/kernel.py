@@ -32,10 +32,11 @@ def heat3d_step(u: jax.Array, *, c0: float = 0.4, c1: float = 0.1,
     inner = pl.pallas_call(
         functools.partial(_kernel, c0=c0, c1=c1),
         grid=((Z - 2) // bz,),
-        # Element-indexed z dim: consecutive slabs OVERLAP by the one-plane
-        # halo — the stencil's redundant-fetch pattern.
-        in_specs=[pl.BlockSpec((pl.Element(bz + 2), Y, X),
-                               lambda i: (i * bz, 0, 0))],
+        # Unblocked (element-indexed) input spec: consecutive slabs OVERLAP
+        # by the one-plane halo — the stencil's redundant-fetch pattern.
+        in_specs=[pl.BlockSpec((bz + 2, Y, X),
+                               lambda i: (i * bz, 0, 0),
+                               indexing_mode=pl.Unblocked())],
         out_specs=pl.BlockSpec((bz, Y - 2, X - 2), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((Z - 2, Y - 2, X - 2), u.dtype),
         interpret=interpret,

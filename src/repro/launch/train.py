@@ -24,11 +24,11 @@ import numpy as np
 from repro.checkpoint.ckpt import latest_step, restore, save
 from repro.configs import TrainConfig, get_config, reduce_for_smoke
 from repro.data.pipeline import make_pipeline
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.launch.steps import make_train_step
 from repro.models import MeshInfo, NO_MESH, init_params, model_specs
 from repro.models.params import shardings as spec_shardings
-from repro.optim import init_opt_state
+from repro.optim import init_opt_state, opt_state_specs
 from repro.runtime.ft import (FailureInjector, StragglerDetector,
                               run_with_restarts)
 
@@ -92,7 +92,7 @@ def main(argv=None) -> int:
     executor = ThreadPoolExecutor(max_workers=1)
     step_fn = make_train_step(cfg, tc, mi)
     if mesh is not None:
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
     else:
         step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
@@ -106,45 +106,58 @@ def main(argv=None) -> int:
             if step is not None:
                 shard_tree = None
                 if mesh is not None:
+                    specs = model_specs(cfg)
                     shard_tree = {
-                        "params": spec_shardings(model_specs(cfg), mesh)}
+                        "params": spec_shardings(specs, mesh),
+                        "opt": spec_shardings(
+                            opt_state_specs(
+                                specs,
+                                with_ef=tc.grad_compression == "int8_ef"),
+                            mesh)}
                 state = restore(args.ckpt_dir, step,
-                                {"params": params, "opt": opt})
+                                {"params": params, "opt": opt},
+                                shardings=shard_tree)
                 params, opt = state["params"], state["opt"]
                 start = step
                 print(f"[train] restored step {step}", flush=True)
         data = make_pipeline(cfg.vocab_size, args.batch, args.seq, args.seed)
         pending = None
         t_all = time.time()
-        for step in range(start, args.steps):
-            injector.check(step)
-            toks, labels = next(data)
-            batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
-            if cfg.is_encdec:
-                batch["enc_x"] = jnp.zeros((args.batch, 32, cfg.d_model),
-                                           jnp.dtype(cfg.activation_dtype))
-            elif cfg.n_image_tokens:
-                batch["img_x"] = jnp.zeros(
-                    (args.batch, cfg.n_image_tokens, cfg.d_model),
-                    jnp.dtype(cfg.activation_dtype))
-            t0 = time.time()
-            params, opt, metrics = step_fn(params, opt, batch)
-            loss = float(metrics["loss"])
-            dt = time.time() - t0
-            slow = straggler.record(step, dt)
-            if step % args.log_every == 0:
-                print(f"step {step:5d} loss {loss:.4f} "
-                      f"gnorm {float(metrics['grad_norm']):.3f} "
-                      f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms"
-                      + ("  [straggler]" if slow else ""), flush=True)
-            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-                if pending is not None:
-                    pending.result()
-                pending = save(args.ckpt_dir, step + 1,
-                               {"params": params, "opt": opt},
-                               executor=executor)
-        if pending is not None:
-            pending.result()
+        try:
+            for step in range(start, args.steps):
+                injector.check(step)
+                toks, labels = next(data)
+                batch = {"tokens": jnp.asarray(toks),
+                         "labels": jnp.asarray(labels)}
+                if cfg.is_encdec:
+                    batch["enc_x"] = jnp.zeros((args.batch, 32, cfg.d_model),
+                                               jnp.dtype(cfg.activation_dtype))
+                elif cfg.n_image_tokens:
+                    batch["img_x"] = jnp.zeros(
+                        (args.batch, cfg.n_image_tokens, cfg.d_model),
+                        jnp.dtype(cfg.activation_dtype))
+                t0 = time.time()
+                params, opt, metrics = step_fn(params, opt, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                slow = straggler.record(step, dt)
+                if step % args.log_every == 0:
+                    print(f"step {step:5d} loss {loss:.4f} "
+                          f"gnorm {float(metrics['grad_norm']):.3f} "
+                          f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms"
+                          + ("  [straggler]" if slow else ""), flush=True)
+                if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                    if pending is not None:
+                        pending.result()
+                    pending = save(args.ckpt_dir, step + 1,
+                                   {"params": params, "opt": opt},
+                                   executor=executor)
+        finally:
+            # Commit any in-flight async checkpoint even when a failure is
+            # raised mid-loop: without this the crash loses the last save and
+            # the restart silently begins from step 0.
+            if pending is not None:
+                pending.result()
         data.close()
         print(f"[train] done {args.steps - start} steps in "
               f"{time.time()-t_all:.1f}s; stragglers={len(straggler.events)}",

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.models.dist import shard_map
 from repro.models.params import ParamSpec
 
 
@@ -261,14 +262,22 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 # ------------------------------------------------------------ paged KV cache
 
 class PagedKV(NamedTuple):
-    """Per-sequence paged KV pool + block table (the SVA structures).
+    """Paged KV pool + block table (the SVA structures). Two layouts:
 
-    k_pool / v_pool: (B, n_pages, page, Hkv, D) — physical pages.
-    block_table:     (B, n_pages) int32 — logical page -> physical page
-                     (per-sequence pool row; the serving engine in
-                     core/sva manages a global pool and hands each compiled
-                     step this sequence-local view).
-    length:          () or (B,) int32 — tokens currently valid.
+    per-slot (dry-run / staging-copy baseline):
+      k_pool / v_pool: (B, n_pages, page, Hkv, D) — each batch slot owns a
+                       private row of physical pages.
+      block_table:     (B, n_pages) int32, a permutation of [0, n_pages).
+
+    global (zero-copy serving): ONE physical pool shared by all slots —
+      k_pool / v_pool: (total_pages, page, Hkv, D)
+      block_table:     (B, max_pages) int32 into the global pool; entries
+                       >= total_pages are the NULL page (writes dropped,
+                       reads zero) marking unallocated table slots.
+
+    length: () or (B,) int32 — tokens currently valid per sequence.
+    The layouts are statically distinguishable by rank (see
+    ``is_global_layout``), so one jitted step handles either.
     """
     k_pool: jax.Array
     v_pool: jax.Array
@@ -277,11 +286,25 @@ class PagedKV(NamedTuple):
 
     @property
     def page_size(self) -> int:
-        return self.k_pool.shape[2]
+        return self.k_pool.shape[-3]
 
     @property
     def capacity(self) -> int:
+        """Per-sequence token capacity."""
+        if is_global_layout(self):
+            return self.block_table.shape[-1] * self.page_size
         return self.k_pool.shape[1] * self.k_pool.shape[2]
+
+
+def is_global_layout(kv: PagedKV) -> bool:
+    """True for the shared-global-pool layout (see PagedKV docstring).
+
+    Rank-based and therefore robust to a leading stacked-blocks axis:
+    per-slot pools carry (pages, page, H, D) behind the table's (B, P) dims
+    (+3 ranks), a global pool carries (total, page, H, D) beside a (B, P)
+    table (+2 ranks).
+    """
+    return kv.k_pool.ndim == kv.block_table.ndim + 2
 
 
 def paged_kv_specs(cfg, batch: int, max_len: int, page_size: int,
@@ -338,16 +361,33 @@ def paged_decode_attention(q: jax.Array, kv: PagedKV, *,
     map-don't-copy insight applied to the kernel's own data movement).
     """
     B, _, Hq, D = q.shape
-    k, v = kv.k_pool, kv.v_pool                            # physical order
-    P_, T = k.shape[1], k.shape[2]
+    if is_global_layout(kv):
+        # GLOBAL POOL: each sequence sees its pages in LOGICAL order through
+        # its table row — the gather IS the IOVA translation. NULL entries
+        # (unallocated) read as exact zeros, matching a freshly
+        # zero-initialized per-slot pool bit-for-bit.
+        total = kv.k_pool.shape[0]
+        T = kv.page_size
+        tbl = kv.block_table                               # (B, P)
+        P_ = tbl.shape[1]
+        null = (tbl >= total)[..., None, None, None]
+        safe = jnp.where(tbl >= total, 0, tbl)
+        k = jnp.where(null, 0, kv.k_pool[safe]).astype(kv.k_pool.dtype)
+        v = jnp.where(null, 0, kv.v_pool[safe]).astype(kv.v_pool.dtype)
+        pos = (jnp.arange(P_)[:, None] * T
+               + jnp.arange(T)[None, :])[None]             # logical (1,P,T)
+        pos = jnp.broadcast_to(pos, (B, P_, T))
+    else:
+        k, v = kv.k_pool, kv.v_pool                        # physical order
+        P_, T = k.shape[1], k.shape[2]
+        inv = jnp.argsort(kv.block_table, axis=1)          # phys -> logical
+        pos = inv[:, :, None] * T + jnp.arange(T)[None, None, :]   # (B,P,T)
     Hkv = k.shape[3]
     G = Hq // Hkv
     qg = q.reshape(B, Hkv, G, D)
     s = jnp.einsum("bhgd,bpthd->bhgpt", qg, k,
                    preferred_element_type=jnp.float32) * (D ** -0.5)
     s = _softcap(s, softcap)
-    inv = jnp.argsort(kv.block_table, axis=1)              # phys -> logical
-    pos = inv[:, :, None] * T + jnp.arange(T)[None, None, :]   # (B,P,T)
     valid = pos < jnp.minimum(
         jnp.broadcast_to(kv.length, (B,))[:, None, None], kv.capacity)
     m = jnp.max(s, axis=(-2, -1), keepdims=True)
@@ -382,6 +422,15 @@ def paged_append(kv: PagedKV, k_new: jax.Array, v_new: jax.Array) -> PagedKV:
     slot = length_b % page
     phys = jnp.take_along_axis(kv.block_table, logical_page[:, None],
                                axis=1)[:, 0]
+    if is_global_layout(kv):
+        # One scatter of B tokens into the shared pool; writes through NULL
+        # table entries (inactive slots) are out-of-bounds and dropped.
+        def write_g(pool, new):
+            return pool.at[phys, slot].set(new[:, 0].astype(pool.dtype),
+                                           mode="drop")
+        return kv._replace(k_pool=write_g(kv.k_pool, k_new),
+                           v_pool=write_g(kv.v_pool, v_new),
+                           length=kv.length + 1)
     slot_mask = (jnp.arange(page)[None, :] ==
                  slot[:, None])[:, None, :, None, None]    # (B,1,page,1,1)
 
@@ -472,7 +521,7 @@ def sp_paged_decode(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
     # shard over 'data'. GQA head counts rarely divide the model axis.
     pool_spec = P(None, seq_axis, None, None, None)
     head_spec = P(None, None, None, None)
-    out, kp, vp = jax.shard_map(
+    out, kp, vp = shard_map(
         local_fn, mesh=mesh,
         in_specs=(head_spec, head_spec, head_spec, pool_spec, pool_spec,
                   P(None, seq_axis), P()),

@@ -41,6 +41,8 @@ class FwdCtx:
     q_offset: Any = 0           # rope/mask offset of token 0 (decode: cache len)
     cross_x: Optional[jax.Array] = None   # image / encoder embeddings (train, prefill)
     sp: bool = False            # sequence-parallel decode (long_500k)
+    seq_lengths: Optional[jax.Array] = None  # (B,) real prompt lengths when a
+                                # batched prefill carries right-padded rows
 
 
 def _mlp_specs(cfg: ModelConfig):
@@ -95,8 +97,16 @@ def stack_specs(tree, n: int):
 
 def layer_cache_specs(cfg: ModelConfig, kind: str, batch: int, max_len: int,
                       page_size: int, src_len: int, stack=None,
-                      per_seq: bool = False):
-    """Cache spec pytree for one layer of ``kind`` (None if stateless)."""
+                      per_seq: bool = False,
+                      global_pages: "int | None" = None):
+    """Cache spec pytree for one layer of ``kind`` (None if stateless).
+
+    ``global_pages``: when set, full-attention layers use the shared global
+    pool layout (one physical pool of that many pages per KV layer, per-slot
+    tables into it — the zero-copy serving layout). Sliding-window layers
+    keep the per-slot ring layout: their KV is a fixed-size rolling buffer,
+    which needs no dynamic paging.
+    """
     lead = (stack,) if stack else ()
     ld = (None,) * len(lead)
     dt = jnp.dtype(cfg.activation_dtype)
@@ -107,29 +117,47 @@ def layer_cache_specs(cfg: ModelConfig, kind: str, batch: int, max_len: int,
         if kind == "attn_mlp_local" and cfg.sliding_window:
             eff_len = min(max_len, cfg.sliding_window)
         n_pages = -(-eff_len // page_size)
-        if _sp_mode(cfg, batch, max_len):
-            # long-context decode: pages shard over 'data' (shard_map SP path)
-            pool_spec = P(*ld, None, "data", None, None, None)
-            table_spec = P(*ld, None, "data")
-        elif cfg.n_kv_heads >= 16:
-            # KV heads divide the model axis: plain head TP
-            pool_spec = P(*ld, "batch", None, None, "tp", None)
-            table_spec = P(*ld, "batch", None)
+        if (global_pages is not None and eff_len == max_len
+                and not _sp_mode(cfg, batch, max_len)):
+            pool_spec = (P(*ld, None, None, "tp", None)
+                         if cfg.n_kv_heads >= 16
+                         else P(*ld, None, "tp", None, None))
+            pool = lambda: ParamSpec(
+                lead + (global_pages, page_size, hkv, dh), dt, pool_spec,
+                init="zeros")
+            out["kv"] = attn.PagedKV(
+                k_pool=pool(), v_pool=pool(),
+                block_table=ParamSpec(lead + (batch, n_pages), jnp.int32,
+                                      P(*ld, "batch", None), init="zeros"),
+                length=ParamSpec(lead + (batch,), jnp.int32,
+                                 P(*ld, "batch"), init="zeros"))
         else:
-            # GQA heads < model axis: shard the within-page token dim over
-            # 'model' instead — block-table gathers stay shard-local and the
-            # decode softmax merges partials over 'model' (flash-decoding).
-            pool_spec = P(*ld, "batch", None, "tp", None, None)
-            table_spec = P(*ld, "batch", None)
-        pool = lambda: ParamSpec(lead + (batch, n_pages, page_size, hkv, dh),
-                                 dt, pool_spec, init="zeros")
-        out["kv"] = attn.PagedKV(
-            k_pool=pool(), v_pool=pool(),
-            block_table=ParamSpec(lead + (batch, n_pages), jnp.int32,
-                                  table_spec, init="zeros"),
-            length=ParamSpec(lead + ((batch,) if per_seq else ()), jnp.int32,
-                             P(*ld, *(("batch",) if per_seq else ())),
-                             init="zeros"))
+            if _sp_mode(cfg, batch, max_len):
+                # long-context decode: pages shard over 'data' (shard_map SP)
+                pool_spec = P(*ld, None, "data", None, None, None)
+                table_spec = P(*ld, None, "data")
+            elif cfg.n_kv_heads >= 16:
+                # KV heads divide the model axis: plain head TP
+                pool_spec = P(*ld, "batch", None, None, "tp", None)
+                table_spec = P(*ld, "batch", None)
+            else:
+                # GQA heads < model axis: shard the within-page token dim over
+                # 'model' instead — block-table gathers stay shard-local and
+                # the decode softmax merges partials over 'model'
+                # (flash-decoding).
+                pool_spec = P(*ld, "batch", None, "tp", None, None)
+                table_spec = P(*ld, "batch", None)
+            pool = lambda: ParamSpec(
+                lead + (batch, n_pages, page_size, hkv, dh),
+                dt, pool_spec, init="zeros")
+            out["kv"] = attn.PagedKV(
+                k_pool=pool(), v_pool=pool(),
+                block_table=ParamSpec(lead + (batch, n_pages), jnp.int32,
+                                      table_spec, init="zeros"),
+                length=ParamSpec(lead + ((batch,) if per_seq else ()),
+                                 jnp.int32,
+                                 P(*ld, *(("batch",) if per_seq else ())),
+                                 init="zeros"))
     if kind in ("xattn_mlp", "cross_mlp"):
         ck = lambda: ParamSpec(lead + (batch, src_len, hkv, dh), dt,
                                P(*ld, "batch", "tp", None, None), init="zeros")
@@ -195,12 +223,34 @@ def _self_attention(p, x, ctx: FwdCtx, cache, window):
     y = attn.out_proj(p, o)
     if ctx.mode == "prefill" and cache is not None and "kv" in cache:
         kv: attn.PagedKV = cache["kv"]
+        if attn.is_global_layout(kv):
+            return y, {**cache, "kv": _prefill_write_global(kv, k, v, ctx, S)}
         n_pages, page = kv.k_pool.shape[1], kv.k_pool.shape[2]
         eff = n_pages * page
 
         def write(pool, kv_seq):
-            if eff < S:                       # sliding-window pool: keep tail
-                seg = kv_seq[:, -eff:]
+            # Ring alignment: token t lives at slot t % eff, so the decode
+            # append (which writes position ``length % eff``) overwrites the
+            # OLDEST resident token. Storing the tail at slot 0 instead
+            # would desync the ring whenever prompt_len % eff != 0: the
+            # append clobbers an in-window token while an out-of-window one
+            # stays resident.
+            if ctx.seq_lengths is not None:
+                # Right-padded batched prefill: per row, keep each
+                # sequence's LAST min(len, eff) REAL tokens ring-aligned
+                # and zero the rest — slicing the padded tail would store
+                # pad-token KV and drop real in-window tokens.
+                lens = ctx.seq_lengths
+                start = jnp.maximum(lens - eff, 0)[:, None]       # (B, 1)
+                i = jnp.arange(eff)[None, :]
+                idx = start + (i - start) % eff                   # (B, eff)
+                valid = idx < lens[:, None]
+                idx = jnp.minimum(idx, max(S - 1, 0))
+                seg = jnp.take_along_axis(kv_seq, idx[:, :, None, None],
+                                          axis=1)
+                seg = jnp.where(valid[:, :, None, None], seg, 0)
+            elif eff < S:                     # sliding-window pool: keep tail
+                seg = jnp.roll(kv_seq[:, -eff:], (S - eff) % eff, axis=1)
             elif eff > S:                     # pool capacity > prompt: pad
                 pad = jnp.zeros((B, eff - S, *kv_seq.shape[2:]), kv_seq.dtype)
                 seg = jnp.concatenate([kv_seq, pad], axis=1)
@@ -213,6 +263,45 @@ def _self_attention(p, x, ctx: FwdCtx, cache, window):
                          length=jnp.full_like(kv.length, min(S, eff)))
         cache = {**cache, "kv": kv}
     return y, cache
+
+
+def _prefill_write_global(kv: attn.PagedKV, k, v, ctx: FwdCtx, S: int
+                          ) -> attn.PagedKV:
+    """Scatter a batched prefill's KV through per-sequence block tables into
+    the SHARED global pool — the zero-copy admission path: no staging cache,
+    no post-hoc slot copy.
+
+    Right-padded positions (>= seq_lengths) are zeroed before the scatter
+    and EVERY table entry of each row is written (real KV first, then zero
+    pages), so recycled physical pages are scrubbed and a sequence's mapped
+    region is bit-identical to a freshly zero-initialized cache. Writes
+    through NULL entries are out-of-bounds and dropped.
+    """
+    lens = ctx.seq_lengths
+    assert lens is not None, \
+        "global-layout prefill requires batch['lengths'] (per-seq prompt lengths)"
+    B = k.shape[0]
+    page = kv.page_size
+    P_ = kv.block_table.shape[-1]
+    keep = (jnp.arange(S)[None, :] < lens[:, None])[:, :, None, None]
+
+    def write(pool, kv_seq):
+        kw = jnp.where(keep, kv_seq, 0).astype(pool.dtype)
+        feat = kv_seq.shape[2:]
+        pad = P_ * page - S
+        if pad > 0:
+            kw = jnp.concatenate(
+                [kw, jnp.zeros((B, pad, *feat), pool.dtype)], axis=1)
+        elif pad < 0:
+            kw = kw[:, :P_ * page]
+        pages = kw.reshape(B, P_, page, *feat)
+        return pool.at[kv.block_table.reshape(-1)].set(
+            pages.reshape(B * P_, page, *feat), mode="drop")
+
+    return kv._replace(k_pool=write(kv.k_pool, k),
+                       v_pool=write(kv.v_pool, v),
+                       length=jnp.broadcast_to(lens, kv.length.shape)
+                       .astype(kv.length.dtype))
 
 
 def _cross_attention(p, x, ctx: FwdCtx, cache):

@@ -85,19 +85,22 @@ def _enc_layer_specs(cfg, kind):
 def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
                 page_size: int = DEFAULT_PAGE_SIZE,
                 src_len: int = ENCDEC_SRC_LEN,
-                per_seq: bool = False) -> Dict[str, Any]:
+                per_seq: bool = False,
+                global_pages: Optional[int] = None) -> Dict[str, Any]:
     out: Dict[str, Any] = {}
     blk = {}
     for i, kind in enumerate(cfg.block_pattern):
         c = layer_cache_specs(cfg, kind, batch, max_len, page_size, src_len,
-                              stack=cfg.n_blocks, per_seq=per_seq)
+                              stack=cfg.n_blocks, per_seq=per_seq,
+                              global_pages=global_pages)
         if c is not None:
             blk[str(i)] = c
     out["blocks"] = blk
     if cfg.first_k_dense:
         out["first"] = {
             str(i): layer_cache_specs(cfg, "attn_mlp", batch, max_len,
-                                      page_size, src_len, per_seq=per_seq)
+                                      page_size, src_len, per_seq=per_seq,
+                                      global_pages=global_pages)
             for i in range(cfg.first_k_dense)}
     if cfg.is_encdec:
         # encoder output embeddings, needed by decode steps
@@ -109,12 +112,15 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
 
 def _identity_tables(cache):
     """Fill block tables with the identity mapping (dry-run/smoke default;
-    the serving engine supplies real page allocations)."""
-    def fix(x, spec_path=""):
-        return x
+    the serving engine supplies real page allocations). Global-layout leaves
+    instead start with every entry NULL (== total pages): nothing is mapped
+    until the engine uploads real rows."""
     def walk(tree):
         if isinstance(tree, attn.PagedKV):
             bt = tree.block_table
+            if attn.is_global_layout(tree):
+                return tree._replace(
+                    block_table=jnp.full_like(bt, tree.k_pool.shape[-4]))
             n_pages = bt.shape[-1]
             iota = jnp.broadcast_to(
                 jnp.arange(n_pages, dtype=jnp.int32), bt.shape)
@@ -130,9 +136,10 @@ def _identity_tables(cache):
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                page_size: int = DEFAULT_PAGE_SIZE,
                src_len: int = ENCDEC_SRC_LEN,
-               length: int = 0, per_seq: bool = False):
+               length: int = 0, per_seq: bool = False,
+               global_pages: Optional[int] = None):
     specs = cache_specs(cfg, batch, max_len, page_size, src_len,
-                        per_seq=per_seq)
+                        per_seq=per_seq, global_pages=global_pages)
     cache = materialize(specs, jax.random.key(0))
     cache = _identity_tables(cache)
     if length:
@@ -141,10 +148,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def set_cache_length(cache, length):
+    """``length``: scalar, or (B,) per-sequence lengths (batched prefill)."""
+    length = jnp.asarray(length)
     def walk(tree):
         if isinstance(tree, attn.PagedKV):
             return tree._replace(
-                length=jnp.full_like(tree.length, length))
+                length=jnp.broadcast_to(length, tree.length.shape)
+                .astype(tree.length.dtype))
         if isinstance(tree, dict):
             return {k: walk(v) for k, v in tree.items()}
         return tree
@@ -250,20 +260,32 @@ def forward_train(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
 
 def forward_prefill(cfg: ModelConfig, params, batch, cache,
                     mi: MeshInfo = NO_MESH):
+    """``batch`` may carry ``lengths`` (B,) int32 — real per-sequence prompt
+    lengths when rows are right-padded (batched/bucketed serving prefill):
+    logits are then taken at each row's last REAL token and cache lengths
+    are set per sequence."""
     tokens = batch["tokens"]
+    lengths = batch.get("lengths")
     cross_x = None
     if cfg.is_encdec:
         cross_x = _run_encoder(cfg, params, batch["enc_x"], mi)
     elif cfg.n_image_tokens:
         cross_x = batch["img_x"].astype(jnp.dtype(cfg.activation_dtype))
-    ctx = FwdCtx(cfg=cfg, mi=mi, mode="prefill", cross_x=cross_x)
+    ctx = FwdCtx(cfg=cfg, mi=mi, mode="prefill", cross_x=cross_x,
+                 seq_lengths=lengths)
     x = _embed_in(cfg, params, tokens, mi)
     x, cache = _run_blocks(cfg, params, x, ctx, cache)
     if cfg.is_encdec:
         cache["enc_out"] = cross_x
-    x = rmsnorm(x[:, -1:], params["final_ln"], cfg.norm_eps)
+    if lengths is None:
+        x = x[:, -1:]
+    else:
+        idx = jnp.maximum(lengths.astype(jnp.int32) - 1, 0)[:, None, None]
+        x = jnp.take_along_axis(x, idx, axis=1)
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
     logits = logits_fn(params["embed"], x, cfg.logit_softcap)
-    cache = set_cache_length(cache, tokens.shape[1])
+    cache = set_cache_length(
+        cache, tokens.shape[1] if lengths is None else lengths)
     return logits, cache
 
 
@@ -297,6 +319,8 @@ def _decode_is_sp(cfg, cache) -> bool:
     kv = find_kv(cache)
     if kv is None:
         return False
+    if attn.is_global_layout(kv):
+        return False            # global serving layout is never SP-sharded
     batch = kv.k_pool.shape[-5 + 0] if kv.k_pool.ndim == 5 else kv.k_pool.shape[1]
     n_pages = kv.k_pool.shape[-4]
     page = kv.k_pool.shape[-3]

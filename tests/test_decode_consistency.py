@@ -47,6 +47,26 @@ def test_decode_matches_prefill(arch, key):
     assert rel < 1e-4, rel
 
 
+def test_decode_matches_prefill_sliding_window_unaligned(key):
+    """Regression: prompt length NOT a multiple of the sliding window
+    (20 % 8 != 0) — the ring must stay aligned (token t at slot t % window)
+    so the decode append overwrites the OLDEST token, not an in-window
+    one."""
+    cfg = reduce_for_smoke(get_config("gemma2-2b"))
+    assert cfg.sliding_window == 8
+    params = init_params(cfg, key)
+    B, S = 2, 20
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    ca = init_cache(cfg, B, max_len=32, page_size=8)
+    ref, _ = forward_prefill(cfg, params, {"tokens": toks}, ca)
+    cb = init_cache(cfg, B, max_len=32, page_size=8)
+    _, cb = forward_prefill(cfg, params, {"tokens": toks[:, :S]}, cb)
+    dec, _ = forward_decode(cfg, params, toks[:, S:S + 1], jnp.int32(S), cb)
+    rel = float(jnp.max(jnp.abs(ref - dec))) / (
+        float(jnp.max(jnp.abs(ref))) + 1e-9)
+    assert rel < 1e-4, rel
+
+
 def test_decode_through_permuted_tables(key):
     """The SVA property: decode output is invariant to the PHYSICAL page
     placement (any block-table permutation gives identical logits)."""

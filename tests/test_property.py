@@ -1,4 +1,8 @@
 """Hypothesis property tests on the system's invariants (deliverable c)."""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

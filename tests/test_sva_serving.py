@@ -35,8 +35,32 @@ def test_mapping_prefix_sharing():
     assert space.pool.n_used == 0
 
 
-def test_kv_manager_tables_are_permutations():
+def test_kv_manager_global_pool_shared_across_slots():
+    """Default layout: ONE pool shared by every slot; unallocated table
+    entries hold the NULL sentinel."""
     mgr = PagedKVManager(n_slots=2, max_pages_per_slot=8, page_size=4)
+    assert mgr.layout == "global" and mgr.pool.n_pages == 16
+    a = mgr.admit(0, prompt_len=10, max_tokens=6)       # 4 pages
+    b = mgr.admit(1, prompt_len=10, max_tokens=6)
+    assert a is not None and b is not None
+    rows = mgr.tables
+    used = rows[a.slot][:4].tolist() + rows[b.slot][:4].tolist()
+    assert sorted(used) == sorted(set(used)), "slots share one page space"
+    assert all(p < 16 for p in used)
+    assert (rows[a.slot][4:] == mgr.null_page).all()    # unmapped == NULL
+    assert mgr.pool.n_used == 8
+    mgr.release(0)
+    assert (mgr.tables[a.slot] == mgr.null_page).all()
+    assert mgr.pool.n_used == 4
+    mgr.release(1)
+    assert mgr.pool.n_used == 0 and len(mgr.free_slots) == 2
+
+
+def test_kv_manager_per_slot_tables_are_permutations():
+    """Copy-baseline layout keeps the per-slot permutation invariant."""
+    mgr = PagedKVManager(n_slots=2, max_pages_per_slot=8, page_size=4,
+                         offload_mode="copy")
+    assert mgr.layout == "per_slot"
     st = mgr.admit(0, prompt_len=10, max_tokens=6)
     assert st is not None
     assert sorted(mgr.tables[st.slot].tolist()) == list(range(8))
@@ -45,6 +69,19 @@ def test_kv_manager_tables_are_permutations():
     assert sorted(mgr.tables[st.slot].tolist()) == list(range(8))
     mgr.release(0)
     assert mgr.free_slots and mgr.pools[st.slot].n_free == 8
+
+
+def test_kv_manager_delta_rows_and_epoch():
+    mgr = PagedKVManager(n_slots=4, max_pages_per_slot=4, page_size=4)
+    mgr.delta_rows()                                    # drain initial dirt
+    assert mgr.delta_rows() == []
+    st = mgr.admit(0, prompt_len=4, max_tokens=4)
+    assert mgr.delta_rows() == [st.slot]                # only the new row
+    assert mgr.delta_rows() == []                       # nothing changed
+    epoch = mgr.epoch
+    mgr.invalidate_epoch()
+    assert mgr.epoch == epoch + 1
+    assert mgr.delta_rows() == [0, 1, 2, 3]             # full re-upload due
 
 
 def _engine_outputs(mode, cfg, params, prompts, n=6):
@@ -101,3 +138,108 @@ def test_engine_queueing_more_requests_than_slots(key):
     assert len(got) == 7
     assert all(len(t) == 4 for t in got)
     assert stats["sva"]["unmap_calls"] == 7        # every seq released
+
+
+def test_engine_zero_copy_no_admission_materialization(key):
+    """Acceptance: zero_copy admission moves table entries (int32 per page),
+    never KV bytes — no staging copies, no per-request cache; decode uses
+    delta table uploads with a full upload only for the initial epoch."""
+    cfg = reduce_for_smoke(get_config("llama3.2-1b"))
+    params = init_params(cfg, key)
+    prompts = [[5, 9, 2, 14], [100, 7], [3, 3, 3, 8, 1, 30], [42]]
+    _, s = _engine_outputs("zero_copy", cfg, params, prompts)
+    assert s["staging_copies"] == 0
+    assert s["sva"]["bytes_copied"] == 0
+    assert s["table_uploads_full"] == 1            # initial epoch sync only
+    assert s["table_uploads_delta"] >= 1
+    # admission bytes: int32 table entries, not KV. Compare against what the
+    # copy baseline would have staged for the same prompts.
+    kv_bytes_staged = sum(len(p) for p in prompts) * 2 * cfg.n_kv_heads \
+        * cfg.d_head * cfg.n_layers
+    assert s["admit_table_bytes"] < kv_bytes_staged
+    assert s["sva"]["table_entries_written"] == 6  # ceil((len+6)/8) per seq
+
+
+def test_engine_epoch_invalidation_forces_full_upload(key):
+    cfg = reduce_for_smoke(get_config("llama3.2-1b"))
+    params = init_params(cfg, key)
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=64, page_size=8,
+                        offload_mode="zero_copy")
+    eng.submit([1, 2, 3], max_tokens=4)
+    eng.run()
+    assert eng.stats()["table_uploads_full"] == 1
+    eng.invalidate_epoch()                         # paper Listing 1 flush
+    eng.submit([4, 5], max_tokens=4)
+    eng.run()
+    assert eng.stats()["table_uploads_full"] == 2
+    assert eng.stats()["tlb"]["invalidations"] >= 1
+
+
+def test_submit_rejects_over_capacity(key):
+    """Regression: prompt+max_tokens beyond slot capacity must be rejected,
+    not silently truncated (the old ``min(need, max_pages)``) — truncation
+    later wrapped page indices into other sequences' KV."""
+    from repro.core.sva.kv_manager import CapacityError
+    cfg = reduce_for_smoke(get_config("llama3.2-1b"))
+    params = init_params(cfg, key)
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=32, page_size=8,
+                        offload_mode="zero_copy")
+    with pytest.raises(CapacityError):
+        eng.submit(list(range(30)), max_tokens=16)  # 46 > 32 tokens
+    mgr = PagedKVManager(n_slots=1, max_pages_per_slot=4, page_size=8)
+    with pytest.raises(CapacityError):
+        mgr.admit(0, prompt_len=30, max_tokens=16)
+    # boundary: exactly at capacity is fine
+    assert mgr.admit(1, prompt_len=16, max_tokens=16) is not None
+
+
+def test_engine_sliding_window_bucketed_prefill_matches_manual(key):
+    """Regression: bucket-padding a prompt past the sliding window (12
+    tokens -> bucket 16 > window 8) must not store pad-token KV in the
+    window ring — each row keeps its own last min(len, window) REAL
+    tokens."""
+    cfg = reduce_for_smoke(get_config("gemma2-2b"))
+    assert cfg.sliding_window and cfg.sliding_window < 16
+    params = init_params(cfg, key)
+    prompts = [[5, 9, 2, 14, 8, 1, 7, 3, 11, 13, 4, 6], [100, 7, 42]]
+
+    def manual(prompt, n=4):
+        cache = init_cache(cfg, 1, max_len=64, page_size=8, per_seq=True)
+        lg, cache = forward_prefill(
+            cfg, params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]},
+            cache)
+        toks = [int(jnp.argmax(lg[0, -1]))]
+        pos = len(prompt)
+        for _ in range(n - 1):
+            lg, cache = forward_decode(
+                cfg, params, jnp.asarray([[toks[-1]]], jnp.int32),
+                jnp.asarray([pos], jnp.int32), cache)
+            toks.append(int(jnp.argmax(lg[0, 0])))
+            pos += 1
+        return toks
+
+    expected = [manual(p) for p in prompts]
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=64, page_size=8,
+                        offload_mode="zero_copy")
+    rids = [eng.submit(p, max_tokens=4) for p in prompts]
+    done = eng.run()
+    assert [done[r].out_tokens for r in rids] == expected
+    # copy mode can't map rows onto the smaller window leaves: fail fast
+    with pytest.raises(NotImplementedError):
+        ServingEngine(cfg, params, n_slots=2, max_len=64, page_size=8,
+                      offload_mode="copy")
+
+
+def test_map_tables_rejects_wraparound():
+    """Regression: installing a table row into a leaf with fewer pages
+    (sliding-window) must raise, not wrap entries modulo the pool size."""
+    import jax.numpy as jnp
+    from repro.core.serving.engine import _map_tables
+    from repro.models import attention as attn
+    kv = attn.PagedKV(
+        k_pool=jnp.zeros((1, 4, 4, 1, 2)), v_pool=jnp.zeros((1, 4, 4, 1, 2)),
+        block_table=jnp.zeros((1, 4), jnp.int32),
+        length=jnp.zeros((1,), jnp.int32))
+    row = np.asarray([[7, 0, 1, 2, 3, 4, 5, 6]], np.int32)   # entry 7 >= 4
+    with pytest.raises(ValueError):
+        _map_tables({"kv": kv}, row, np.zeros(1, np.int32))
