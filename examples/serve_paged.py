@@ -1,5 +1,10 @@
 """Paged serving example: continuous batching with zero-copy admission,
-prefix-shared pages, and SVA/TLB statistics.
+copy-on-write prefix sharing, and SVA/TLB statistics.
+
+Most requests open with the same system prompt, so admission maps the
+already-resident prefix pages (refcount++) and prefills only each prompt's
+suffix; exact-duplicate prompts also share the partial tail page and
+CoW-duplicate it on their first divergent token.
 
   PYTHONPATH=src python examples/serve_paged.py
 """
@@ -16,9 +21,16 @@ eng = ServingEngine(cfg, params, n_slots=4, max_len=128, page_size=8,
                     offload_mode="zero_copy")
 
 rng = np.random.default_rng(0)
-print("submitting 10 requests into 4 slots (continuous batching)...")
-rids = [eng.submit(rng.integers(0, cfg.vocab_size, size=rng.integers(4, 20))
-                   .tolist(), max_tokens=10) for _ in range(10)]
+system = rng.integers(0, cfg.vocab_size, size=16).tolist()  # shared prefix
+print("submitting 10 requests into 4 slots (continuous batching; "
+      "8 share a system prompt, 2 are exact duplicates)...")
+prompts = [system + rng.integers(0, cfg.vocab_size,
+                                 size=rng.integers(2, 8)).tolist()
+           for _ in range(7)]
+prompts.append(list(prompts[1]))                 # exact duplicate
+prompts += [rng.integers(0, cfg.vocab_size, size=12).tolist()
+            for _ in range(2)]                   # unrelated
+rids = [eng.submit(p, max_tokens=10) for p in prompts]
 done = eng.run()
 for rid in rids[:4]:
     r = done[rid]
@@ -29,4 +41,9 @@ print(f"\n{s['tokens']} tokens, {s['decode_steps']} decode steps, "
       f"{s['prefills']} prefills")
 print(f"SVA: {s['sva']}")
 print(f"TLB: {s['tlb']}")
-print(f"pages used/free: {s['pool_used']}/{s['pool_free']}")
+print(f"prefix cache: {s['prefix']}")
+print(f"prefill tokens saved: {s['prefill_tokens_saved']} "
+      f"(shared admissions: {s['shared_admissions']}); "
+      f"CoW page copies: {s['cow_page_copies']}")
+print(f"pages used/free: {s['pool_used']}/{s['pool_free']} "
+      f"(warm prefix cache retains pages after completion)")

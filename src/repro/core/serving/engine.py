@@ -19,11 +19,31 @@ result applied to KV admission):
              into it, physically duplicates it, and copies it leaf-by-leaf
              into the batch cache.
 
+Copy-on-write prefix sharing (zero_copy, full-attention archs): admission
+consults the manager's :class:`~repro.core.sva.kv_manager.PrefixIndex` and
+maps a prompt's already-resident prefix pages via refcount++ — the batched
+prefill then feeds ONLY each prompt's non-shared suffix (fewer tokens per
+admission: a direct throughput win), reading the skipped prefix's KV back
+out of the shared pool (``attention.prefix_context_attention``) and
+scattering through ``write_tables`` whose shared entries are NULLed so a
+shared page is never written. When a decode append lands in a page another
+sequence still maps, the manager queues a CoW page duplication which
+``_apply_cow`` executes device-side (one batched pool-to-pool page copy)
+before the next prefill/decode touches the page. Completed requests leave
+their prompt pages behind as a warm prefix cache (LRU-evicted under page
+pressure).
+
+The decode hot path can run through the Pallas scalar-prefetch kernel
+(``decode_backend="pallas"`` — kernels/paged_attention, interpret-mode off
+TPU): the per-slot block tables live in SMEM and drive the KV page DMAs,
+so gathering through *shared* block tables costs the same as private ones.
+
 CPU-testable with reduced configs; the same engine drives TPU meshes by
 passing a MeshInfo.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -199,7 +219,11 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, n_slots: int, max_len: int,
                  page_size: int = 8, mi: MeshInfo = NO_MESH,
                  offload_mode: str = "zero_copy", src_len: int = 16,
-                 eos_token: Optional[int] = None):
+                 eos_token: Optional[int] = None,
+                 prefix_sharing: bool = True,
+                 decode_backend: Optional[str] = None):
+        if decode_backend is not None:
+            cfg = dataclasses.replace(cfg, decode_backend=decode_backend)
         self.cfg, self.params, self.mi = cfg, params, mi
         self.n_slots, self.max_len, self.page_size = n_slots, max_len, page_size
         self.src_len = src_len
@@ -209,9 +233,17 @@ class ServingEngine:
                     * sum(1 for k in cfg.layer_kinds() if "attn" in k or k == "cross_mlp")
                     * jnp.dtype(cfg.activation_dtype).itemsize)
         self.offload_mode = offload_mode
+        # Prefix sharing needs every stateful layer to live in the shared
+        # global pool: sliding-window rings / recurrent states / cross-KV are
+        # per-slot, so a suffix-only prefill could not reconstruct them.
+        share_kinds = {"attn_mlp", "attn_moe", "attn"}
+        self._can_share = (offload_mode == "zero_copy" and prefix_sharing
+                           and not cfg.is_encdec and not cfg.n_image_tokens
+                           and all(k in share_kinds for k in cfg.layer_kinds()))
         self.mgr = PagedKVManager(n_slots, self.max_pages, page_size,
                                   kv_bytes_per_token=kv_bytes,
-                                  offload_mode=offload_mode)
+                                  offload_mode=offload_mode,
+                                  prefix_sharing=self._can_share)
         self.queue: deque = deque()
         self.active: Dict[int, Request] = {}
         self._next_id = 0
@@ -225,7 +257,9 @@ class ServingEngine:
                         "decode_s": 0.0, "admit_s": 0.0,
                         "table_uploads_full": 0, "table_uploads_delta": 0,
                         "table_rows_uploaded": 0, "table_upload_bytes": 0,
-                        "admit_table_bytes": 0}
+                        "admit_table_bytes": 0,
+                        "prefill_tokens_saved": 0, "shared_admissions": 0,
+                        "cow_page_copies": 0}
 
         if offload_mode == "zero_copy":
             if _sp_mode(cfg, n_slots, max_len):
@@ -242,6 +276,7 @@ class ServingEngine:
                                     donate_argnums=(2,))
             self._decode = jax.jit(self._decode_zero_copy,
                                    donate_argnums=(4,))
+            self._cow = jax.jit(self._cow_copy_pages, donate_argnums=(0,))
         else:
             if (cfg.sliding_window
                     and any(k == "attn_mlp_local" for k in cfg.layer_kinds())
@@ -294,31 +329,52 @@ class ServingEngine:
 
     # --------------------------------------------------------------- admission
     def _admit(self):
-        admitted = []
+        if self.offload_mode == "zero_copy":
+            self._apply_cow()   # queued page copies must land before any
+                                # new prefill can recycle their source pages
+        admitted: List = []
         while self.queue:
             req = self.queue[0]
             t0 = time.perf_counter()
-            st = self.mgr.admit(req.req_id, len(req.prompt), req.max_tokens)
+            st = self.mgr.admit(req.req_id, len(req.prompt), req.max_tokens,
+                                tokens=req.prompt if self._can_share else None)
             self.metrics["admit_s"] += time.perf_counter() - t0
             if st is None:
                 break                      # no slot/pages: continuous batching waits
             self.queue.popleft()
+            if self.offload_mode == "copy":
+                self._prefill_into_slot(req, st.slot)
+                self.active[req.req_id] = req
+                continue
             admitted.append((req, st))
         if not admitted:
             return
-        if self.offload_mode == "copy":
-            for req, st in admitted:
-                self._prefill_into_slot(req, st.slot)
-                self.active[req.req_id] = req
-            return
-        if self._exact_prefill:
-            groups: Dict[int, list] = {}
-            for item in admitted:
-                groups.setdefault(len(item[0].prompt), []).append(item)
-            for group in groups.values():
-                self._batched_prefill(group)
-        else:
-            self._batched_prefill(admitted)
+        # Prefill in dependency WAVES: a request whose shared prefix pages
+        # were freshly allocated by another request admitted THIS round must
+        # prefill after its provider (the prefix KV has to be resident in
+        # the pool before a sharer's suffix-only prefill reads it). Wave of
+        # a request = 1 + max wave over the providers of its shared pages.
+        page_wave: Dict[int, int] = {}
+        waves: Dict[int, list] = {}
+        for req, st in admitted:
+            w = 0
+            for pg in st.pages[:st.shared_pages]:
+                if pg in page_wave:
+                    w = max(w, page_wave[pg] + 1)
+            for pg in st.pages[st.shared_pages:]:
+                page_wave[pg] = w
+            waves.setdefault(w, []).append((req, st))
+        for w in sorted(waves):
+            wave = waves[w]
+            if self._exact_prefill:
+                groups: Dict[int, list] = {}
+                for item in wave:
+                    suf = len(item[0].prompt) - item[1].prefill_start
+                    groups.setdefault(suf, []).append(item)
+                for group in groups.values():
+                    self._batched_prefill(group)
+            else:
+                self._batched_prefill(wave)
         for req, st in admitted:
             self.active[req.req_id] = req
 
@@ -334,23 +390,36 @@ class ServingEngine:
         """ONE padded prefill call for all newly admitted requests: KV is
         scattered straight into the shared global pool through the admitted
         rows' block tables. Admission's host->device traffic is the token
-        ids plus int32 table entries — not KV bytes."""
+        ids plus int32 table entries — not KV bytes.
+
+        Prefix-shared admissions feed ONLY the non-shared suffix (the
+        bucket is sized on suffix lengths, so a 1000-token prompt with a
+        992-token shared prefix prefills like an 8-token prompt): the
+        skipped prefix's KV is read back from the shared pool, and the
+        scatter runs through ``write_tables`` (shared entries NULLed) so
+        shared pages are never written."""
         t0 = time.perf_counter()
-        plens = [len(req.prompt) for req, _ in group]
-        lb = max(plens) if self._exact_prefill else self._bucket_len(max(plens))
+        sufs = [len(req.prompt) - st.prefill_start for req, st in group]
+        sharing = any(st.shared_pages for _, st in group)
+        lb = max(sufs) if self._exact_prefill else self._bucket_len(max(sufs))
         nb = 1
         while nb < len(group):
             nb *= 2
         nb = max(min(nb, self.n_slots), len(group))
         tokens = np.zeros((nb, lb), np.int32)
         lengths = np.zeros((nb,), np.int32)
+        prefix = np.zeros((nb,), np.int32)
         slots = np.full((nb,), self.n_slots, np.int32)   # OOB: scatter-dropped
         tables = np.full((nb, self.max_pages), self.mgr.null_page, np.int32)
+        wtables = np.full((nb, self.max_pages), self.mgr.null_page, np.int32)
         for i, (req, st) in enumerate(group):
-            tokens[i, :len(req.prompt)] = req.prompt
-            lengths[i] = len(req.prompt)
+            tokens[i, :sufs[i]] = req.prompt[st.prefill_start:]
+            lengths[i] = sufs[i]
+            prefix[i] = st.prefill_start
             slots[i] = st.slot
             tables[i] = self.mgr.tables[st.slot]
+            wtables[i] = tables[i]
+            wtables[i, :st.shared_pages] = self.mgr.null_page
         # Admission upload accounting: only the REAL rows' table entries
         # (padding rows exist for jit-key stability, not data movement).
         self.metrics["admit_table_bytes"] += len(group) * self.max_pages * 4
@@ -358,6 +427,11 @@ class ServingEngine:
                  "lengths": jnp.asarray(lengths),
                  "tables": jnp.asarray(tables),
                  "slots": jnp.asarray(slots)}
+        if sharing:
+            # Separate trace: the non-shared path keeps its (cheaper) flash
+            # prefill and its exact numerics.
+            batch["prefix_lens"] = jnp.asarray(prefix)
+            batch["write_tables"] = jnp.asarray(wtables)
         logits, self.cache = self._prefill(self.params, batch, self.cache)
         logits = np.asarray(logits)
         now = time.perf_counter()
@@ -373,6 +447,9 @@ class ServingEngine:
         cfg = self.cfg
         view = _build_prefill_view(cache, batch["tables"], batch["lengths"])
         fb = {"tokens": batch["tokens"], "lengths": batch["lengths"]}
+        if "prefix_lens" in batch:      # suffix-only prefill (prefix sharing)
+            fb["prefix_lens"] = batch["prefix_lens"]
+            fb["write_tables"] = batch["write_tables"]
         nb = batch["tokens"].shape[0]
         if cfg.is_encdec:
             fb["enc_x"] = jnp.zeros((nb, self.src_len, cfg.d_model),
@@ -413,6 +490,48 @@ class ServingEngine:
         self.metrics["prefills"] += 1
         self.metrics["prefill_reqs"] += 1
         self.metrics["prefill_s"] += time.perf_counter() - t0
+
+    # --------------------------------------------------------------- CoW
+    def _cow_copy_pages(self, cache, src, dst):
+        """One batched physical page duplication in every global-pool KV
+        leaf: ``pool[dst] = pool[src]`` (padding pairs carry dst == NULL and
+        are scatter-dropped). This is the entire device-side cost of a CoW
+        divergence — page_size tokens of KV per layer, instead of
+        re-prefilling the whole shared prefix."""
+        def walk(tree):
+            if isinstance(tree, attn.PagedKV):
+                if not attn.is_global_layout(tree):
+                    return tree
+                lead = tree.block_table.ndim - 2
+                def cp(pool):
+                    if lead:
+                        return pool.at[:, dst].set(pool[:, src], mode="drop")
+                    return pool.at[dst].set(pool[src], mode="drop")
+                return tree._replace(k_pool=cp(tree.k_pool),
+                                     v_pool=cp(tree.v_pool))
+            if isinstance(tree, dict):
+                return {k: walk(v) for k, v in tree.items()}
+            if isinstance(tree, tuple) and hasattr(tree, "_fields"):
+                return type(tree)(*(walk(v) for v in tree))
+            return tree
+        return walk(cache)
+
+    def _apply_cow(self):
+        """Execute queued copy-on-write page duplications (src -> dst)
+        before the next device op reads a duplicated page or a new
+        admission recycles a released source page."""
+        pairs = self.mgr.drain_cow_copies()
+        if not pairs:
+            return
+        n = 1
+        while n < len(pairs):
+            n *= 2
+        src = np.zeros((n,), np.int32)
+        dst = np.full((n,), self.mgr.null_page, np.int32)  # pad: dropped
+        for i, (s, d) in enumerate(pairs):
+            src[i], dst[i] = s, d
+        self.cache = self._cow(self.cache, jnp.asarray(src), jnp.asarray(dst))
+        self.metrics["cow_page_copies"] += len(pairs)
 
     # --------------------------------------------------------------- decode
     def _upload_tables(self):
@@ -455,6 +574,8 @@ class ServingEngine:
                 (req.prompt[-1] if req.prompt else 0)
         pos = jnp.asarray(kv_len)                       # write/rope position
         if self.offload_mode == "zero_copy":
+            self._apply_cow()       # duplicated pages must exist before the
+                                    # decode writes/reads through new tables
             self._upload_tables()
             logits, self.cache = self._decode(
                 self.params, jnp.asarray(last), pos, self._tables_dev,
@@ -480,4 +601,14 @@ class ServingEngine:
         self.metrics["decode_s"] += time.perf_counter() - t0
 
     def stats(self) -> dict:
-        return {**self.metrics, **self.mgr.stats()}
+        s = self.mgr.stats()
+        m = dict(self.metrics)
+        # Single source of truth is the manager's prefix index; the engine
+        # keys are kept as the stable serving-level aliases
+        # (``cow_page_copies`` stays engine-owned: copies EXECUTED
+        # device-side, vs the manager's queued count).
+        pf = s.get("prefix")
+        if pf is not None:
+            m["prefill_tokens_saved"] = pf["tokens_saved"]
+            m["shared_admissions"] = pf["hits"]
+        return {**m, **s}

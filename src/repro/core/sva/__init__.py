@@ -1,8 +1,19 @@
+"""Shared-virtual-address layer: page pool, host mapping API, IOTLB model,
+and the paged KV manager binding them to the serving engine.
+
+Prefix sharing + copy-on-write: :class:`PrefixIndex` (kv_manager) gives the
+pool RadixAttention-style content addressing — admissions map an already-
+resident prompt prefix via refcount++ (zero-copy across *requests*, the
+paper's map-don't-copy result one level up), writes into shared pages CoW,
+and released prompts persist as a warm prefix cache with LRU eviction.
+"""
 from repro.core.sva.kv_manager import (CapacityError, PagedKVManager,
-                                       SeqState)
+                                       PrefixIndex, PrefixStats, SeqState)
 from repro.core.sva.mapping import Mapping, SVASpace, SVAStats
 from repro.core.sva.page_pool import OutOfPages, PagePool, PoolStats
 from repro.core.sva.tlb import TLBStats, TranslationCache
 
-__all__ = ["CapacityError", "Mapping", "OutOfPages", "PagePool", "PagedKVManager", "PoolStats",
-           "SVASpace", "SVAStats", "SeqState", "TLBStats", "TranslationCache"]
+__all__ = ["CapacityError", "Mapping", "OutOfPages", "PagePool",
+           "PagedKVManager", "PoolStats", "PrefixIndex", "PrefixStats",
+           "SVASpace", "SVAStats", "SeqState", "TLBStats",
+           "TranslationCache"]

@@ -16,6 +16,21 @@ Two layouts:
            is the layout the staging-copy admission path (the paper's
            baseline) uses.
 
+Copy-on-write prefix sharing (global layout): a :class:`PrefixIndex` keyed
+by token-content hash chains over FULL pages lets ``admit`` map a prompt's
+already-resident prefix pages via refcount++ instead of fresh allocation —
+the paper's map-don't-copy result applied across *requests* (multiple agents
+translating to the same physical pages, RadixAttention-style). The index
+also caches one partially-filled tail page per prompt, so an identical
+prompt maps end-to-end with zero fresh prefill. Shared pages are immutable:
+``append_token`` detects a write landing in a page whose refcount > 1 and
+either *steals* it back from the index (sole other owner) or performs a CoW
+duplication — a fresh page plus a queued device-side page copy (drained by
+the engine via ``drain_cow_copies`` before the next decode step). ``release``
+only drops the sequence's own references, so prefix pages survive completion
+as a warm prefix cache; the index LRU-evicts leaf entries when the pool runs
+dry.
+
 Delta-upload bookkeeping: rows whose tables changed since the last device
 upload accumulate in ``dirty_rows`` and are drained with ``delta_rows()`` —
 the serving-level analogue of a warm IOTLB. ``invalidate_epoch()`` models
@@ -25,7 +40,7 @@ be a full-table upload.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -48,6 +63,186 @@ class SeqState:
     max_tokens: int
     tokens: List[int] = field(default_factory=list)   # generated so far
     done: bool = False
+    shared_pages: int = 0         # leading pages mapped from the prefix index
+    prefill_start: int = 0        # first prompt position that needs compute
+
+
+class _PrefixNode:
+    """One FULL page of prompt tokens in the content-addressed radix chain.
+
+    Children are keyed by the NEXT page's token tuple; ``partials`` caches
+    partially-filled tail pages (content tuple -> page id). Every node and
+    every partial entry owns exactly one pool reference on its page."""
+
+    __slots__ = ("page", "parent", "key", "children", "partials", "last_used")
+
+    def __init__(self, page: Optional[int], parent: Optional["_PrefixNode"],
+                 key: Optional[Tuple[int, ...]]):
+        self.page = page
+        self.parent = parent
+        self.key = key
+        self.children: Dict[Tuple[int, ...], _PrefixNode] = {}
+        self.partials: Dict[Tuple[int, ...], List] = {}   # content -> [page, lru]
+        self.last_used = 0
+
+
+@dataclass
+class PrefixStats:
+    hits: int = 0                 # admissions that mapped >= 1 shared page
+    misses: int = 0
+    pages_shared: int = 0         # share events at admission
+    tokens_saved: int = 0         # prompt tokens whose prefill was skipped
+    evictions: int = 0            # LRU entries dropped under page pressure
+    steals: int = 0               # index entries reclaimed by their writer
+
+    def as_dict(self):
+        return dict(hits=self.hits, misses=self.misses,
+                    pages_shared=self.pages_shared,
+                    tokens_saved=self.tokens_saved,
+                    evictions=self.evictions, steals=self.steals)
+
+
+class PrefixIndex:
+    """Longest-shared-prefix lookup over admitted prompts, token-hash per
+    full page (plus one cached partial tail page per prompt)."""
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.root = _PrefixNode(None, None, None)
+        self._clock = 0
+        self._partial_by_page: Dict[int, Tuple[_PrefixNode, Tuple[int, ...]]] = {}
+        self._node_by_page: Dict[int, _PrefixNode] = {}
+        self.stats = PrefixStats()
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    @property
+    def n_cached_pages(self) -> int:
+        return len(self._node_by_page) + len(self._partial_by_page)
+
+    # ------------------------------------------------------------- lookup
+    def match(self, tokens: Sequence[int]) -> Tuple[List[int], int]:
+        """Longest shared prefix of ``tokens`` already resident in the pool.
+
+        Returns (pages, matched_tokens): full pages matched by content chain,
+        plus the cached partial tail page iff it covers the ENTIRE remaining
+        prompt (so prefill never has to write into the middle of a shared
+        page — writes into shared pages only ever come from decode appends,
+        which CoW)."""
+        p = self.page_size
+        now = self._tick()
+        node = self.root
+        pages: List[int] = []
+        i = 0
+        while i + p <= len(tokens):
+            child = node.children.get(tuple(tokens[i:i + p]))
+            if child is None:
+                break
+            child.last_used = now
+            pages.append(child.page)
+            node = child
+            i += p
+        rem = tuple(tokens[i:])
+        matched = i
+        if rem and rem in node.partials:
+            entry = node.partials[rem]
+            entry[1] = now
+            pages.append(entry[0])
+            matched += len(rem)
+        return pages, matched
+
+    # ----------------------------------------------------------- register
+    def register(self, tokens: Sequence[int], pages: Sequence[int],
+                 pool: PagePool) -> None:
+        """Insert a newly admitted prompt's pages. Each NEW entry takes one
+        pool reference (the warm-cache ownership that outlives the
+        sequence); already-present entries are left untouched (the admitted
+        sequence mapped those very pages via ``match``)."""
+        p = self.page_size
+        now = self._tick()
+        node = self.root
+        i = 0
+        li = 0
+        while i + p <= len(tokens):
+            key = tuple(tokens[i:i + p])
+            child = node.children.get(key)
+            if child is None:
+                child = _PrefixNode(pages[li], node, key)
+                node.children[key] = child
+                self._node_by_page[pages[li]] = child
+                pool.share([pages[li]])
+            child.last_used = now
+            node = child
+            i += p
+            li += 1
+        rem = tuple(tokens[i:])
+        if rem and rem not in node.partials and li < len(pages):
+            node.partials[rem] = [pages[li], now]
+            self._partial_by_page[pages[li]] = (node, rem)
+            pool.share([pages[li]])
+
+    # ----------------------------------------------------------- eviction
+    def _candidates(self):
+        """(last_used, kind, node, key) for every evictable entry: partial
+        pages, and leaf full-page nodes (no children, no partials) — parents
+        become evictable bottom-up once their subtree is gone."""
+        out = []
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            for content, (page, lru) in n.partials.items():
+                out.append((lru, "partial", n, content))
+            if n is not self.root and not n.children and not n.partials:
+                out.append((n.last_used, "node", n, n.key))
+        return out
+
+    def evict_lru(self, pool: PagePool) -> bool:
+        """Drop the least-recently-used evictable entry whose page the index
+        is the SOLE owner of (refcount 1 — freeing it actually returns a
+        page). Entries still referenced by live sequences are kept: evicting
+        them frees nothing and only destroys future sharing value. Returns
+        False when no eviction can free a page."""
+        page_of = lambda c: c[2].partials[c[3]][0] if c[1] == "partial" \
+            else c[2].page
+        cands = [c for c in self._candidates() if pool.refcount(page_of(c)) == 1]
+        if not cands:
+            return False
+        _, kind, node, key = min(cands, key=lambda c: c[0])
+        if kind == "partial":
+            page, _ = node.partials.pop(key)
+            self._partial_by_page.pop(page, None)
+        else:
+            page = node.page
+            node.parent.children.pop(key, None)
+            self._node_by_page.pop(page, None)
+        pool.free([page])
+        self.stats.evictions += 1
+        return True
+
+    def try_release_for_write(self, page: int, pool: PagePool) -> bool:
+        """A sequence is about to write into ``page`` and found refcount > 1.
+        If the ONLY other owner is this index (refcount == 2) and the entry
+        is a leaf, reclaim it — drop the cache entry instead of copying.
+        Returns True when the caller may now write in place."""
+        if pool.refcount(page) != 2:
+            return False
+        if page in self._partial_by_page:
+            node, content = self._partial_by_page.pop(page)
+            node.partials.pop(content, None)
+        elif page in self._node_by_page:
+            node = self._node_by_page[page]
+            if node.children or node.partials:
+                return False          # descendants still depend on the chain
+            del self._node_by_page[page]
+            node.parent.children.pop(node.key, None)
+        else:
+            return False
+        pool.free([page])
+        self.stats.steals += 1
+        return True
 
 
 class PagedKVManager:
@@ -55,7 +250,7 @@ class PagedKVManager:
 
     def __init__(self, n_slots: int, max_pages_per_slot: int, page_size: int,
                  kv_bytes_per_token: int = 0, offload_mode: str = "zero_copy",
-                 layout: Optional[str] = None):
+                 layout: Optional[str] = None, prefix_sharing: bool = True):
         assert offload_mode in ("zero_copy", "copy")
         if layout is None:
             layout = "global" if offload_mode == "zero_copy" else "per_slot"
@@ -79,6 +274,11 @@ class PagedKVManager:
                           for _ in range(n_slots)]
             self.pool = None
             self.tables = np.zeros((n_slots, max_pages_per_slot), np.int32)
+        # Prefix sharing needs one physical page space addressable from every
+        # slot's table row — only the global layout has that.
+        self.prefix = (PrefixIndex(page_size)
+                       if layout == "global" and prefix_sharing else None)
+        self.pending_cow: List[Tuple[int, int]] = []   # (src, dst) page copies
         self.space = SVASpace(PagePool(1, page_size))   # stats aggregator
         self.tlb = TranslationCache(n_entries=4096)
         self.free_slots = list(range(n_slots - 1, -1, -1))
@@ -102,9 +302,28 @@ class PagedKVManager:
                 f"({self.max_pages * self.page_size} tokens)")
         return need
 
-    def admit(self, seq_id: int, prompt_len: int, max_tokens: int
-              ) -> Optional[SeqState]:
+    def _alloc_evicting(self, n: int) -> List[int]:
+        """Global-pool alloc that LRU-evicts warm prefix-cache entries under
+        ``OutOfPages`` pressure before giving up."""
+        while True:
+            try:
+                return self.pool.alloc(n)
+            except OutOfPages:
+                if self.prefix is None or not self.prefix.evict_lru(self.pool):
+                    raise
+
+    def admit(self, seq_id: int, prompt_len: int, max_tokens: int,
+              tokens: Optional[Sequence[int]] = None) -> Optional[SeqState]:
         """Allocate a slot + pages for a prompt.
+
+        ``tokens`` (the actual prompt ids) enables prefix sharing: full
+        pages whose content is already resident are mapped via refcount++
+        instead of fresh allocation, and ``SeqState.prefill_start`` tells
+        the engine how many leading tokens need NO prefill compute (their KV
+        is already in the shared pages). At least the last prompt token is
+        always left to compute so admission can produce first-token logits;
+        its KV write is dropped by the engine when it lands in a shared page
+        (the page already holds exactly that KV).
 
         Returns None when no slot/pages are free right now (continuous
         batching waits); raises :class:`CapacityError` for requests that can
@@ -114,14 +333,44 @@ class PagedKVManager:
         if not self.free_slots:
             return None
         slot = self.free_slots[-1]
-        alloc_pool = self.pool if self.layout == "global" else self.pools[slot]
-        try:
-            pages = alloc_pool.alloc(need)
-        except OutOfPages:
-            return None
+        shared: List[int] = []
+        prefill_start = 0
+        sharing = (self.prefix is not None and tokens is not None
+                   and prompt_len > 0)
+        if sharing:
+            tokens = list(tokens)[:prompt_len]
+            shared, matched = self.prefix.match(tokens)
+            # Always recompute >= 1 token for logits; when the whole prompt
+            # is resident the recomputed token's page is shared and the
+            # engine drops its (identical) KV write.
+            prefill_start = min(matched, prompt_len - 1)
+            if shared:
+                self.pool.share(shared)     # hold before eviction can run
+        if self.layout == "global":
+            try:
+                fresh = self._alloc_evicting(need - len(shared))
+            except OutOfPages:
+                if shared:
+                    self.pool.free(shared)
+                return None
+        else:
+            try:
+                fresh = self.pools[slot].alloc(need)
+            except OutOfPages:
+                return None
+        pages = shared + fresh
         self.free_slots.pop()
-        st = SeqState(seq_id, slot, prompt_len, pages, max_tokens)
+        st = SeqState(seq_id, slot, prompt_len, pages, max_tokens,
+                      shared_pages=len(shared), prefill_start=prefill_start)
         self.seqs[seq_id] = st
+        if sharing:
+            self.prefix.register(tokens, pages, self.pool)
+            if shared:
+                self.prefix.stats.hits += 1
+                self.prefix.stats.pages_shared += len(shared)
+                self.prefix.stats.tokens_saved += prefill_start
+            else:
+                self.prefix.stats.misses += 1
         if self.layout == "global":
             row = np.full((self.max_pages,), self.null_page, np.int32)
             row[:need] = pages
@@ -135,11 +384,19 @@ class PagedKVManager:
         self.tables[slot] = row
         self.lengths[slot] = prompt_len
         self.dirty_rows.add(slot)
-        self.space.stats.map_calls += 1
-        self.space.stats.table_entries_written += len(pages)
-        self.space.stats.bytes_mapped += prompt_len * self.kv_bytes_per_token
         if self.offload_mode == "copy":
-            self.space.stats.bytes_copied += prompt_len * self.kv_bytes_per_token
+            # Staging baseline: dedicated counters (never map_* — see
+            # core/sva/mapping.py stage()).
+            self.space.stats.stage_calls += 1
+            self.space.stats.bytes_copied += \
+                prompt_len * self.kv_bytes_per_token
+        else:
+            # Shared pages still cost a table-entry write (the mapping) —
+            # what sharing saves is the allocation and the prefill compute.
+            self.space.stats.map_calls += 1
+            self.space.stats.table_entries_written += len(pages)
+            self.space.stats.bytes_mapped += \
+                prompt_len * self.kv_bytes_per_token
         for lp, pp in enumerate(pages):
             self.tlb.fill((slot, lp), pp)
         return st
@@ -157,9 +414,10 @@ class PagedKVManager:
                 raise CapacityError(
                     f"seq {seq_id} grew past its slot capacity "
                     f"({self.max_pages} pages)")
-            alloc_pool = (self.pool if self.layout == "global"
-                          else self.pools[st.slot])
-            new = alloc_pool.alloc(1)
+            if self.layout == "global":
+                new = self._alloc_evicting(1)
+            else:
+                new = self.pools[st.slot].alloc(1)
             lp = len(st.pages)
             st.pages.extend(new)
             if self.layout == "global":
@@ -174,8 +432,47 @@ class PagedKVManager:
             self.tlb.fill((st.slot, lp), new[0])
         if len(st.tokens) >= st.max_tokens:
             st.done = True
+        if self.layout == "global" and not st.done:
+            # A completing sequence's final token is never written to the
+            # device cache (the engine releases it before the next decode
+            # step), so duplicating/stealing its target page would only
+            # waste a copy or destroy a still-useful cache entry.
+            self._cow_before_write(st)
+
+    def _cow_before_write(self, st: SeqState) -> None:
+        """The token just appended will be WRITTEN (by the next decode step)
+        at position ``st.length - 1``. If that write lands in a page another
+        mapping still references, duplicate first — or steal the page back
+        from the prefix index when the index is its only other owner."""
+        li = (st.length - 1) // self.page_size
+        pg = st.pages[li]
+        if not self.pool.is_shared(pg):
+            return
+        if self.prefix is not None and \
+                self.prefix.try_release_for_write(pg, self.pool):
+            return                           # reclaimed: write in place
+        dst = self._alloc_evicting(1)[0]
+        self.pending_cow.append((pg, dst))   # device copies src -> dst
+        st.pages[li] = dst
+        self.tables[st.slot, li] = dst
+        self.pool.free([pg])                 # drop OUR ref; sharers keep it
+        self.pool.stats.cow_copies += 1
+        self.dirty_rows.add(st.slot)
+        self.space.stats.table_entries_written += 1
+        self.tlb.invalidate_key((st.slot, li))
+        self.tlb.fill((st.slot, li), dst)
+
+    def drain_cow_copies(self) -> List[Tuple[int, int]]:
+        """(src, dst) physical page copies the device must perform before
+        the next decode step reads/writes the duplicated pages."""
+        out = self.pending_cow
+        self.pending_cow = []
+        return out
 
     def release(self, seq_id: int) -> None:
+        """Drop the sequence's OWN page references. Pages also registered in
+        the prefix index keep the index's reference and live on as the warm
+        prefix cache (evicted LRU under page pressure)."""
         st = self.seqs.pop(seq_id)
         free_pool = (self.pool if self.layout == "global"
                      else self.pools[st.slot])
@@ -221,9 +518,15 @@ class PagedKVManager:
         high = sum(p.stats.high_water for p in pools)
         util = (sum(p.utilization * p.n_pages for p in pools)
                 / max(sum(p.n_pages for p in pools), 1))
-        return {"sva": self.space.stats.as_dict(),
-                "tlb": self.tlb.stats.as_dict(),
-                "pool_used": used,
-                "pool_free": free,
-                "pool_high_water": high,
-                "pool_utilization": round(util, 4)}
+        out = {"sva": self.space.stats.as_dict(),
+               "tlb": self.tlb.stats.as_dict(),
+               "pool_used": used,
+               "pool_free": free,
+               "pool_high_water": high,
+               "pool_utilization": round(util, 4),
+               "pool_shares": sum(p.stats.shares for p in pools),
+               "cow_copies": sum(p.stats.cow_copies for p in pools)}
+        if self.prefix is not None:
+            out["prefix"] = {**self.prefix.stats.as_dict(),
+                             "cached_pages": self.prefix.n_cached_pages}
+        return out

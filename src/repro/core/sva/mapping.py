@@ -11,7 +11,16 @@ against each other exactly like the paper's Fig. 2:
 
 Costs are tracked in abstract units (bytes moved, table entries written,
 map calls) so both the simulator and the TPU-level benchmarks can consume
-them.
+them. The two modes use DISJOINT counters: ``map_calls`` /
+``table_entries_written`` / ``bytes_mapped`` count only zero-copy mapping
+work, ``stage_calls`` / ``bytes_copied`` only staging work — so a Fig.2-style
+zero-copy-vs-copy A/B never sees one mode's admissions leak into the other
+mode's columns.
+
+TLB semantics mirror the paper's two invalidation granularities:
+``map``/``extend`` warm per-page translations, ``unmap`` self-invalidates
+only the unmapped pages' entries (device translations for OTHER mappings
+stay warm), and ``invalidate_epoch`` performs the Listing-1 full flush.
 """
 from __future__ import annotations
 
@@ -44,6 +53,7 @@ class SVAStats:
     table_entries_written: int = 0
     bytes_copied: int = 0         # copy-mode staging traffic
     bytes_mapped: int = 0
+    stage_calls: int = 0          # copy-mode admissions (dedicated counter)
     host_seconds: float = 0.0
 
     def as_dict(self):
@@ -51,6 +61,7 @@ class SVAStats:
                     table_entries_written=self.table_entries_written,
                     bytes_copied=self.bytes_copied,
                     bytes_mapped=self.bytes_mapped,
+                    stage_calls=self.stage_calls,
                     host_seconds=round(self.host_seconds, 6))
 
 
@@ -64,12 +75,13 @@ class SVASpace:
         self._next = 1
         self._maps: Dict[int, Mapping] = {}
 
-    # ----------------------------------------------------------- zero-copy
-    def map(self, n_bytes: int,
-            share_prefix_from: Optional[Mapping] = None,
-            prefix_pages: int = 0) -> Mapping:
-        """Zero-copy: allocate pages and write block-table entries only."""
-        t0 = time.perf_counter()
+    # ------------------------------------------------------------- internal
+    def _allocate(self, n_bytes: int,
+                  share_prefix_from: Optional[Mapping] = None,
+                  prefix_pages: int = 0) -> Mapping:
+        """Allocate pages + register a Mapping WITHOUT touching any mode
+        counter (shared by ``map`` and ``stage`` so the two admission modes
+        keep disjoint stats)."""
         page_bytes = self.pool.page_size
         n_pages = -(-n_bytes // page_bytes)
         shared: List[int] = []
@@ -80,40 +92,76 @@ class SVASpace:
         m = Mapping(self._next, shared + fresh, n_bytes, len(shared))
         self._next += 1
         self._maps[m.handle] = m
+        return m
+
+    # ----------------------------------------------------------- zero-copy
+    def map(self, n_bytes: int,
+            share_prefix_from: Optional[Mapping] = None,
+            prefix_pages: int = 0) -> Mapping:
+        """Zero-copy: allocate pages and write block-table entries only."""
+        t0 = time.perf_counter()
+        m = self._allocate(n_bytes, share_prefix_from, prefix_pages)
         self.stats.map_calls += 1
-        self.stats.table_entries_written += n_pages
+        self.stats.table_entries_written += len(m.pages)
         self.stats.bytes_mapped += n_bytes
+        for lp, pp in enumerate(m.pages):
+            self.tlb.fill((m.handle, lp), pp)
         self.stats.host_seconds += time.perf_counter() - t0
         return m
 
     def extend(self, m: Mapping, n_new_pages: int = 1) -> List[int]:
-        """Grow a mapping (decode appends crossing a page boundary)."""
+        """Grow a mapping (decode appends crossing a page boundary).
+
+        Keeps ``Mapping.n_bytes`` and ``stats.bytes_mapped`` in sync so
+        decode-driven growth shows up in the memory-pressure stats (it used
+        to grow ``m.pages`` silently, leaving both stale)."""
         t0 = time.perf_counter()
         fresh = self.pool.alloc(n_new_pages)
+        grown_bytes = n_new_pages * self.pool.page_size
+        for lp, pp in enumerate(fresh, start=len(m.pages)):
+            self.tlb.fill((m.handle, lp), pp)
         m.pages.extend(fresh)
+        m.n_bytes += grown_bytes
+        self.stats.bytes_mapped += grown_bytes
         self.stats.table_entries_written += n_new_pages
         self.stats.host_seconds += time.perf_counter() - t0
         return fresh
 
     def unmap(self, m: Mapping) -> None:
+        """Release a mapping, invalidating ONLY its own translations.
+
+        A whole-TLB (epoch) flush per unmap would force a full re-walk /
+        full-table re-upload for every OTHER live mapping each time one
+        request completes; per-key invalidation keeps their translations
+        warm. The Listing-1 full flush is ``invalidate_epoch()``."""
         t0 = time.perf_counter()
         self.pool.free(m.pages)
         self._maps.pop(m.handle, None)
         self.stats.unmap_calls += 1
-        # device-side translations for these pages are now stale:
-        self.tlb.invalidate()
+        for lp in range(len(m.pages)):
+            self.tlb.invalidate_key((m.handle, lp))
         self.stats.host_seconds += time.perf_counter() - t0
+
+    def invalidate_epoch(self) -> None:
+        """Full translation flush (paper Listing 1)."""
+        self.tlb.invalidate()
 
     # ----------------------------------------------------------- copy mode
     def stage(self, n_bytes: int, do_copy=None) -> Mapping:
         """Copy-based baseline: contiguous staging (models the reserved
         physically-addressed DRAM region). ``do_copy(n_bytes)`` performs the
-        actual data movement when the caller has real buffers."""
+        actual data movement when the caller has real buffers.
+
+        Tracked in DEDICATED counters (``stage_calls`` / ``bytes_copied``):
+        it no longer routes through ``map()``, so copy-mode admissions never
+        inflate ``map_calls`` / ``table_entries_written`` / ``bytes_mapped``
+        and corrupt a zero-copy-vs-copy A/B."""
         t0 = time.perf_counter()
-        m = self.map(n_bytes)                 # still needs pages...
+        m = self._allocate(n_bytes)
         m.shared_prefix_pages = 0
         if do_copy is not None:
             do_copy(n_bytes)
-        self.stats.bytes_copied += n_bytes    # ...but pays the copy
+        self.stats.stage_calls += 1
+        self.stats.bytes_copied += n_bytes    # pays the copy, not the map
         self.stats.host_seconds += time.perf_counter() - t0
         return m

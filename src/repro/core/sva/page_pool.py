@@ -32,10 +32,13 @@ class PoolStats:
     shares: int = 0
     high_water: int = 0
     failed_allocs: int = 0
+    cow_copies: int = 0           # writes that had to duplicate a shared page
 
     def as_dict(self):
         return dict(allocs=self.allocs, frees=self.frees, shares=self.shares,
-                    high_water=self.high_water, failed_allocs=self.failed_allocs)
+                    high_water=self.high_water,
+                    failed_allocs=self.failed_allocs,
+                    cow_copies=self.cow_copies)
 
 
 class PagePool:
@@ -85,6 +88,11 @@ class PagePool:
 
     def refcount(self, page: int) -> int:
         return int(self._ref[page])
+
+    def is_shared(self, page: int) -> bool:
+        """True when more than one mapping references ``page`` — a write
+        through any single mapping must copy-on-write first."""
+        return int(self._ref[page]) > 1
 
     @property
     def utilization(self) -> float:

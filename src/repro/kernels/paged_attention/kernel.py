@@ -19,6 +19,19 @@ Layout (per sequence-batch):
 Grid: (B, n_pages) — online softmax accumulates across the page axis in VMEM
 scratch, exactly the Snitch double-buffered DMA pattern (pages are fetched
 one grid step ahead by the Pallas pipeline while the previous page computes).
+
+``paged_attention_global`` is the same kernel over the serving engine's
+GLOBAL layout: ONE physical pool shared by every slot —
+  k_pool / v_pool: (total_pages, page, Hkv, D)
+  table:           (B, max_pages) int32 into the global pool; entries
+                   >= total_pages are the NULL page marking unallocated
+                   slots (they only appear at logical positions >= length,
+                   so the length mask already excludes them; the index map
+                   just clamps them to a safe page for the DMA).
+Because the per-sequence translation happens in the SMEM index map, two
+slots whose tables point at the same physical page (copy-on-write prefix
+sharing) stream it from the same HBM address — the kernel IS the map-don't-
+copy path at decode granularity.
 """
 from __future__ import annotations
 
@@ -45,8 +58,10 @@ def _kernel(table_ref, len_ref,        # scalar-prefetch (SMEM)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0]                               # (Hq, D)
-    k = k_ref[0, 0]                            # (page, Hkv, D)
-    v = v_ref[0, 0]
+    # KV block: (1, 1, page, Hkv, D) per-slot, (1, page, Hkv, D) global —
+    # same page once the leading singleton block dims are dropped.
+    k = k_ref[...].reshape(k_ref.shape[-3:])   # (page, Hkv, D)
+    v = v_ref[...].reshape(v_ref.shape[-3:])
     Hq, D = q.shape
     Hkv = k.shape[1]
     G = Hq // Hkv
@@ -116,6 +131,63 @@ def paged_attention(q, k_pool, v_pool, block_table, lengths, *,
                          lambda b, p, tbl, ln: (b, tbl[b, p], 0, 0, 0)),
             pl.BlockSpec((1, 1, page, Hkv, D),
                          lambda b, p, tbl, ln: (b, tbl[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, p, tbl, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hq, 1), jnp.float32),
+            pltpu.VMEM((Hq, 1), jnp.float32),
+            pltpu.VMEM((Hq, 1, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, q, k_pool, v_pool)
+
+
+def paged_attention_global(q, k_pool, v_pool, block_table, lengths, *,
+                           softcap=None, table_residency: str = "smem",
+                           interpret: bool = True):
+    """Decode attention over the GLOBAL (shared-pool) layout — see module
+    docstring. q: (B, Hq, D); pools: (total, page, Hkv, D); table: (B, P)
+    int32 with NULL (>= total) marking unallocated entries. Returns
+    (B, Hq, D)."""
+    B, Hq, D = q.shape
+    total, page, Hkv, _ = k_pool.shape
+    P = block_table.shape[1]
+
+    if table_residency == "hbm":
+        # LLC-off baseline: gather each sequence's pages out of the shared
+        # pool into a private per-slot pool (pays the full data movement),
+        # then run the per-slot kernel on an identity table.
+        null = (block_table >= total)[:, :, None, None, None]
+        safe = jnp.where(block_table >= total, 0, block_table)
+        kg = jnp.where(null, 0, k_pool[safe]).astype(k_pool.dtype)
+        vg = jnp.where(null, 0, v_pool[safe]).astype(v_pool.dtype)
+        ident = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P))
+        return paged_attention(q, kg, vg, ident, lengths, softcap=softcap,
+                               interpret=interpret)
+
+    grid = (B, P)
+    kernel = functools.partial(_kernel, page=page, n_pages=P, softcap=softcap)
+
+    def kv_index(b, p, tbl, ln):
+        # THE TECHNIQUE, shared-pool form: the DMA source page is the
+        # SMEM-resident translation. NULL entries are clamped to page 0 for
+        # a safe (dead) fetch — their logical positions are >= length, so
+        # the kernel's validity mask already zeroes their contribution.
+        t = tbl[b, p]
+        return (jnp.where(t >= total, 0, t), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, p, tbl, ln: (b, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, D), kv_index),
+            pl.BlockSpec((1, page, Hkv, D), kv_index),
         ],
         out_specs=pl.BlockSpec((1, Hq, D), lambda b, p, tbl, ln: (b, 0, 0)),
         scratch_shapes=[

@@ -1,12 +1,20 @@
-"""Jitted public wrapper for the paged-attention kernel."""
+"""Jitted public wrapper for the paged-attention kernel.
+
+Dispatches on pool rank: (B, n_pages, page, Hkv, D) is the per-slot layout,
+(total_pages, page, Hkv, D) the serving engine's shared global pool (block
+tables may then point several slots at the SAME physical page — prefix
+sharing resolves inside the scalar-prefetch index map).
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 
-from repro.kernels.paged_attention.kernel import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.kernel import (paged_attention,
+                                                  paged_attention_global)
+from repro.kernels.paged_attention.ref import (paged_attention_global_ref,
+                                               paged_attention_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "table_residency",
@@ -14,9 +22,10 @@ from repro.kernels.paged_attention.ref import paged_attention_ref
 def paged_decode(q, k_pool, v_pool, block_table, lengths, *, softcap=None,
                  table_residency: str = "smem", interpret: bool = True,
                  use_pallas: bool = True):
+    is_global = k_pool.ndim == 4
     if not use_pallas:
-        return paged_attention_ref(q, k_pool, v_pool, block_table, lengths,
-                                   softcap=softcap)
-    return paged_attention(q, k_pool, v_pool, block_table, lengths,
-                           softcap=softcap, table_residency=table_residency,
-                           interpret=interpret)
+        ref = paged_attention_global_ref if is_global else paged_attention_ref
+        return ref(q, k_pool, v_pool, block_table, lengths, softcap=softcap)
+    fn = paged_attention_global if is_global else paged_attention
+    return fn(q, k_pool, v_pool, block_table, lengths, softcap=softcap,
+              table_residency=table_residency, interpret=interpret)

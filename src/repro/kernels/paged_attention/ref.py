@@ -27,3 +27,19 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, lengths, *,
     s = jnp.where(pos[None, None, :] < lengths[:, None, None], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_attention_global_ref(q, k_pool, v_pool, block_table, lengths, *,
+                               softcap=None):
+    """Global-layout oracle: pools (total, page, Hkv, D), table (B, P) with
+    NULL entries (>= total) reading as zero pages. Gathers each sequence's
+    logical view out of the shared pool, then reuses the per-slot oracle on
+    an identity table."""
+    total = k_pool.shape[0]
+    B, P = block_table.shape
+    null = (block_table >= total)[:, :, None, None, None]
+    safe = jnp.where(block_table >= total, 0, block_table)
+    kg = jnp.where(null, 0, k_pool[safe]).astype(k_pool.dtype)
+    vg = jnp.where(null, 0, v_pool[safe]).astype(v_pool.dtype)
+    ident = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P))
+    return paged_attention_ref(q, kg, vg, ident, lengths, softcap=softcap)

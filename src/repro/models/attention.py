@@ -327,6 +327,20 @@ def paged_kv_specs(cfg, batch: int, max_len: int, page_size: int,
     )
 
 
+def gather_global_pages(kv: PagedKV):
+    """Logical (B, P, page, Hkv, D) view of a GLOBAL shared pool through the
+    per-slot block table — the IOVA translation for the shared-pool layout.
+    NULL entries (>= total pages: unallocated table slots) read as exact
+    zeros, matching a freshly zero-initialized per-slot pool bit-for-bit."""
+    total = kv.k_pool.shape[0]
+    tbl = kv.block_table
+    null = (tbl >= total)[..., None, None, None]
+    safe = jnp.where(tbl >= total, 0, tbl)
+    k = jnp.where(null, 0, kv.k_pool[safe]).astype(kv.k_pool.dtype)
+    v = jnp.where(null, 0, kv.v_pool[safe]).astype(kv.v_pool.dtype)
+    return k, v
+
+
 def gather_pages(pool: jax.Array, table: jax.Array) -> jax.Array:
     """(B, n_pages, page, H, D) gathered through (B, n_pages) -> (B, S, H, D).
 
@@ -339,8 +353,17 @@ def gather_pages(pool: jax.Array, table: jax.Array) -> jax.Array:
 
 
 def paged_decode_attention(q: jax.Array, kv: PagedKV, *,
-                           softcap: Optional[float] = None) -> jax.Array:
+                           softcap: Optional[float] = None,
+                           backend: str = "jax") -> jax.Array:
     """One-token decode over the paged pool. q: (B, 1, Hq, D).
+
+    ``backend="pallas"`` routes the step through the scalar-prefetch Pallas
+    kernel (kernels/paged_attention): the block table lives in SMEM and
+    drives the KV page DMAs directly — the paper's PTW-in-LLC realized on
+    the serving hot path (interpret-mode off-TPU, compiled kernel on TPU).
+    Both PagedKV layouts are supported; rare shapes the kernel does not
+    cover (leading stacked-blocks axis outside a scan) fall back to the
+    pure-JAX path.
 
     Sliding-window layers use a pool whose capacity equals the window; the
     rolling write in ``paged_append`` makes every slot valid once
@@ -361,19 +384,22 @@ def paged_decode_attention(q: jax.Array, kv: PagedKV, *,
     map-don't-copy insight applied to the kernel's own data movement).
     """
     B, _, Hq, D = q.shape
+    if backend == "pallas" and kv.block_table.ndim == 2:
+        from repro.kernels.paged_attention.ops import paged_decode
+        lengths = jnp.broadcast_to(kv.length, (B,)).astype(jnp.int32)
+        interpret = jax.default_backend() != "tpu"
+        out = paged_decode(q[:, 0], kv.k_pool, kv.v_pool,
+                           kv.block_table.astype(jnp.int32), lengths,
+                           softcap=softcap, interpret=interpret)
+        return out[:, None].astype(q.dtype)
     if is_global_layout(kv):
         # GLOBAL POOL: each sequence sees its pages in LOGICAL order through
         # its table row — the gather IS the IOVA translation. NULL entries
         # (unallocated) read as exact zeros, matching a freshly
         # zero-initialized per-slot pool bit-for-bit.
-        total = kv.k_pool.shape[0]
         T = kv.page_size
-        tbl = kv.block_table                               # (B, P)
-        P_ = tbl.shape[1]
-        null = (tbl >= total)[..., None, None, None]
-        safe = jnp.where(tbl >= total, 0, tbl)
-        k = jnp.where(null, 0, kv.k_pool[safe]).astype(kv.k_pool.dtype)
-        v = jnp.where(null, 0, kv.v_pool[safe]).astype(kv.v_pool.dtype)
+        P_ = kv.block_table.shape[1]
+        k, v = gather_global_pages(kv)
         pos = (jnp.arange(P_)[:, None] * T
                + jnp.arange(T)[None, :])[None]             # logical (1,P,T)
         pos = jnp.broadcast_to(pos, (B, P_, T))
@@ -399,6 +425,62 @@ def paged_decode_attention(q: jax.Array, kv: PagedKV, *,
                    v.astype(jnp.float32))
     o = o / jnp.maximum(l[..., 0], 1e-20)
     return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def prefix_context_attention(q: jax.Array, k_suf: jax.Array, v_suf: jax.Array,
+                             kv: PagedKV, prefix_lens: jax.Array,
+                             suffix_lens: jax.Array, *,
+                             softcap: Optional[float] = None) -> jax.Array:
+    """Suffix-only prefill attention with a CACHED prefix (CoW prefix
+    sharing): row b's queries are the ``suffix_lens[b]`` right-padded tokens
+    at logical positions ``prefix_lens[b] + s``; keys/values are the union
+    of (a) the prefix KV already resident in the GLOBAL paged pool — read
+    through the row's block table, exactly the pages ``admit`` mapped via
+    refcount++ — and (b) the suffix K/V computed by this very call.
+
+    q/k_suf/v_suf: (B, S, H*, D); kv: global-layout PagedKV whose pool holds
+    the shared prefix pages. Returns (B, S, Hq, D). Dense (one (S, P*T+S)
+    score block in fp32): admission-path work where S is a padded suffix —
+    tokens the prefix cache just SAVED from this matmul dwarf its cost.
+    """
+    assert is_global_layout(kv), "prefix continuation needs the global pool"
+    B, S, Hq, D = q.shape
+    T = kv.page_size
+    P_ = kv.block_table.shape[1]
+    k_pre, v_pre = gather_global_pages(kv)
+    k_pre = k_pre.reshape(B, P_ * T, -1, D)
+    v_pre = v_pre.reshape(B, P_ * T, -1, D)
+    Hkv = k_pre.shape[2]
+    G = Hq // Hkv
+    if G > 1:
+        k_pre = jnp.repeat(k_pre, G, axis=2)
+        v_pre = jnp.repeat(v_pre, G, axis=2)
+        k_suf = jnp.repeat(k_suf, G, axis=2)
+        v_suf = jnp.repeat(v_suf, G, axis=2)
+    k = jnp.concatenate([k_pre, k_suf.astype(k_pre.dtype)], axis=1)
+    v = jnp.concatenate([v_pre, v_suf.astype(v_pre.dtype)], axis=1)
+    # kv-position mask: prefix slot j is valid iff j < prefix_len (every
+    # valid prefix position precedes every query); suffix slot s at
+    # position prefix+s obeys the causal triangle and the real-token mask.
+    pre_valid = jnp.arange(P_ * T)[None] < prefix_lens[:, None]   # (B, P*T)
+    sidx = jnp.arange(S)
+    suf_valid = (sidx[None, :] < suffix_lens[:, None])            # (B, S)
+    causal = sidx[None, :] <= sidx[:, None]                       # (S, S)
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(pre_valid[:, None], (B, S, P_ * T)),
+         suf_valid[:, None] & causal[None]], axis=-1)             # (B,S,P*T+S)
+    s = jnp.einsum("bshd,bthd->bsht", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    s = _softcap(s, softcap)
+    s = jnp.where(mask[:, :, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p_ = jnp.exp(s - m)
+    p_ = jnp.where(mask[:, :, None, :], p_, 0.0)
+    l = jnp.sum(p_, axis=-1, keepdims=True)
+    o = jnp.einsum("bsht,bthd->bshd", p_, v.astype(jnp.float32))
+    o = o / jnp.maximum(l, 1e-20)
+    return o.astype(q.dtype)
 
 
 def paged_append(kv: PagedKV, k_new: jax.Array, v_new: jax.Array) -> PagedKV:

@@ -43,6 +43,11 @@ class FwdCtx:
     sp: bool = False            # sequence-parallel decode (long_500k)
     seq_lengths: Optional[jax.Array] = None  # (B,) real prompt lengths when a
                                 # batched prefill carries right-padded rows
+    # CoW prefix sharing (suffix-only prefill): tokens already resident in
+    # the shared pool per row, and the scatter tables whose shared entries
+    # are NULLed so the prefill write never touches a shared page.
+    kv_prefix_lens: Optional[jax.Array] = None   # (B,) int32
+    write_tables: Optional[jax.Array] = None     # (B, max_pages) int32
 
 
 def _mlp_specs(cfg: ModelConfig):
@@ -203,8 +208,26 @@ def _self_attention(p, x, ctx: FwdCtx, cache, window):
         else:
             kv_new = attn.paged_append(kv, k, v)
             o = attn.paged_decode_attention(q, kv_new,
-                                            softcap=cfg.attn_softcap)
+                                            softcap=cfg.attn_softcap,
+                                            backend=cfg.decode_backend)
         return attn.out_proj(p, o), {**cache, "kv": kv_new}
+    if (ctx.kv_prefix_lens is not None and ctx.mode == "prefill"
+            and cache is not None and "kv" in cache
+            and attn.is_global_layout(cache["kv"])):
+        # Suffix-only prefill (CoW prefix sharing): row b's token 0 sits at
+        # logical position kv_prefix_lens[b]; the skipped prefix's KV is
+        # read back from the shared pool pages instead of being recomputed.
+        positions = jnp.arange(S)[None] + ctx.kv_prefix_lens[:, None]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        kv: attn.PagedKV = cache["kv"]
+        o = attn.prefix_context_attention(
+            q, k, v, kv, ctx.kv_prefix_lens,
+            jnp.broadcast_to(ctx.seq_lengths, (B,)),
+            softcap=cfg.attn_softcap)
+        o = shard(o, mi, P("batch", None, "tp", None))
+        y = attn.out_proj(p, o)
+        return y, {**cache, "kv": _prefill_write_global(kv, k, v, ctx, S)}
     positions = jnp.arange(S)[None] + ctx.q_offset
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
@@ -276,6 +299,13 @@ def _prefill_write_global(kv: attn.PagedKV, k, v, ctx: FwdCtx, S: int
     pages), so recycled physical pages are scrubbed and a sequence's mapped
     region is bit-identical to a freshly zero-initialized cache. Writes
     through NULL entries are out-of-bounds and dropped.
+
+    Prefix continuation (``ctx.kv_prefix_lens`` set): row b's token s lives
+    at logical position ``prefix[b] + s``, and the scatter goes through
+    ``ctx.write_tables`` — the row tables with SHARED entries NULLed — so a
+    shared page is never written (neither with recomputed KV nor with the
+    zero scrub; its content is already exactly right, and other sequences
+    still map it). Fresh pages keep the zero-scrub hygiene.
     """
     lens = ctx.seq_lengths
     assert lens is not None, \
@@ -283,24 +313,44 @@ def _prefill_write_global(kv: attn.PagedKV, k, v, ctx: FwdCtx, S: int
     B = k.shape[0]
     page = kv.page_size
     P_ = kv.block_table.shape[-1]
+    prefix = ctx.kv_prefix_lens
+    if prefix is None:
+        scatter_tbl = kv.block_table
+        total_len = lens
+    else:
+        scatter_tbl = jnp.broadcast_to(ctx.write_tables,
+                                       kv.block_table.shape).astype(jnp.int32)
+        total_len = lens + prefix
     keep = (jnp.arange(S)[None, :] < lens[:, None])[:, :, None, None]
 
     def write(pool, kv_seq):
         kw = jnp.where(keep, kv_seq, 0).astype(pool.dtype)
         feat = kv_seq.shape[2:]
-        pad = P_ * page - S
-        if pad > 0:
-            kw = jnp.concatenate(
-                [kw, jnp.zeros((B, pad, *feat), pool.dtype)], axis=1)
-        elif pad < 0:
-            kw = kw[:, :P_ * page]
+        if prefix is None:
+            pad = P_ * page - S
+            if pad > 0:
+                kw = jnp.concatenate(
+                    [kw, jnp.zeros((B, pad, *feat), pool.dtype)], axis=1)
+            elif pad < 0:
+                kw = kw[:, :P_ * page]
+        else:
+            # Re-align each row so token s lands at logical slot
+            # prefix[b] + s: gather with a shifted index (out-of-suffix
+            # slots -> 0 = the scrub value). Slots belonging to shared
+            # pages also read 0 here, but their writes are dropped by the
+            # NULLed scatter table.
+            sidx = jnp.arange(P_ * page)[None, :] - prefix[:, None]  # (B,P*T)
+            valid = (sidx >= 0) & (sidx < lens[:, None])
+            gidx = jnp.clip(sidx, 0, max(S - 1, 0))
+            kw = jnp.take_along_axis(kw, gidx[:, :, None, None], axis=1)
+            kw = jnp.where(valid[:, :, None, None], kw, 0)
         pages = kw.reshape(B, P_, page, *feat)
-        return pool.at[kv.block_table.reshape(-1)].set(
+        return pool.at[scatter_tbl.reshape(-1)].set(
             pages.reshape(B * P_, page, *feat), mode="drop")
 
     return kv._replace(k_pool=write(kv.k_pool, k),
                        v_pool=write(kv.v_pool, v),
-                       length=jnp.broadcast_to(lens, kv.length.shape)
+                       length=jnp.broadcast_to(total_len, kv.length.shape)
                        .astype(kv.length.dtype))
 
 

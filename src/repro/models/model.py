@@ -263,16 +263,24 @@ def forward_prefill(cfg: ModelConfig, params, batch, cache,
     """``batch`` may carry ``lengths`` (B,) int32 — real per-sequence prompt
     lengths when rows are right-padded (batched/bucketed serving prefill):
     logits are then taken at each row's last REAL token and cache lengths
-    are set per sequence."""
+    are set per sequence.
+
+    CoW prefix sharing adds ``prefix_lens`` (B,) int32 — tokens already
+    resident in the shared pool, so ``tokens`` holds only each prompt's
+    SUFFIX (``lengths`` = suffix lengths) — and ``write_tables`` (B, P)
+    int32, the scatter tables with shared entries NULLed (see
+    core/serving/engine.py)."""
     tokens = batch["tokens"]
     lengths = batch.get("lengths")
+    prefix_lens = batch.get("prefix_lens")
     cross_x = None
     if cfg.is_encdec:
         cross_x = _run_encoder(cfg, params, batch["enc_x"], mi)
     elif cfg.n_image_tokens:
         cross_x = batch["img_x"].astype(jnp.dtype(cfg.activation_dtype))
     ctx = FwdCtx(cfg=cfg, mi=mi, mode="prefill", cross_x=cross_x,
-                 seq_lengths=lengths)
+                 seq_lengths=lengths, kv_prefix_lens=prefix_lens,
+                 write_tables=batch.get("write_tables"))
     x = _embed_in(cfg, params, tokens, mi)
     x, cache = _run_blocks(cfg, params, x, ctx, cache)
     if cfg.is_encdec:
@@ -284,8 +292,10 @@ def forward_prefill(cfg: ModelConfig, params, batch, cache,
         x = jnp.take_along_axis(x, idx, axis=1)
     x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
     logits = logits_fn(params["embed"], x, cfg.logit_softcap)
-    cache = set_cache_length(
-        cache, tokens.shape[1] if lengths is None else lengths)
+    total = tokens.shape[1] if lengths is None else lengths
+    if prefix_lens is not None:
+        total = total + prefix_lens        # cache holds prefix + suffix
+    cache = set_cache_length(cache, total)
     return logits, cache
 
 

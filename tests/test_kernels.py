@@ -96,6 +96,30 @@ def test_paged_attention(B, Hq, Hkv, n_pages, page, cap, residency, key):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
 
 
+@pytest.mark.parametrize("residency", ["smem", "hbm"])
+@pytest.mark.parametrize("cap", [None, 30.0])
+def test_paged_attention_global_layout(residency, cap, key):
+    """Shared-global-pool kernel: slots may map the SAME physical page (CoW
+    prefix sharing) and unallocated entries hold the NULL sentinel."""
+    from repro.kernels.paged_attention.kernel import paged_attention_global
+    from repro.kernels.paged_attention.ref import paged_attention_global_ref
+    B, Hq, Hkv, total, P, page, D = 3, 8, 2, 12, 4, 16, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    kp = jax.random.normal(ks[1], (total, page, Hkv, D))
+    vp = jax.random.normal(ks[2], (total, page, Hkv, D))
+    tbl = jnp.asarray([[0, 1, 2, total],       # slot 0
+                       [0, 1, 5, total],       # slot 1 SHARES pages 0, 1
+                       [total] * 4],           # empty slot: all NULL
+                      jnp.int32)
+    lens = jnp.asarray([3 * page - 5, 2 * page + 3, 0], jnp.int32)
+    out = paged_attention_global(q, kp, vp, tbl, lens, softcap=cap,
+                                 table_residency=residency)
+    ref = paged_attention_global_ref(q, kp, vp, tbl, lens, softcap=cap)
+    np.testing.assert_allclose(np.asarray(out[:2]), np.asarray(ref[:2]),
+                               atol=1e-5)
+
+
 @pytest.mark.parametrize("S,Hq,Hkv,causal", [
     (128, 4, 2, True), (64, 2, 2, False), (256, 8, 2, True)])
 def test_flash_kernel(S, Hq, Hkv, causal, key):

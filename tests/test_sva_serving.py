@@ -230,6 +230,166 @@ def test_engine_sliding_window_bucketed_prefill_matches_manual(key):
                       offload_mode="copy")
 
 
+# --------------------------------------------------------- mapping.py fixes
+
+def test_stage_keeps_zero_copy_stats_clean():
+    """Regression: the copy baseline must NOT inflate the zero-copy
+    counters (stage() used to call map() internally, so every copy-mode
+    admission also bumped map_calls/table_entries_written/bytes_mapped,
+    corrupting any Fig.2-style A/B)."""
+    space = SVASpace(PagePool(128, 4096))
+    space.stage(16 * 4096)
+    assert space.stats.stage_calls == 1
+    assert space.stats.bytes_copied == 16 * 4096
+    assert space.stats.map_calls == 0
+    assert space.stats.table_entries_written == 0
+    assert space.stats.bytes_mapped == 0
+    space.map(4 * 4096)
+    assert space.stats.map_calls == 1 and space.stats.stage_calls == 1
+
+
+def test_extend_updates_mapping_and_stats():
+    """Regression: extend() used to grow m.pages but leave Mapping.n_bytes
+    and stats.bytes_mapped stale — decode-driven growth was invisible to
+    the memory-pressure stats."""
+    space = SVASpace(PagePool(64, 4096))
+    m = space.map(2 * 4096)
+    assert m.n_bytes == 2 * 4096
+    space.extend(m, n_new_pages=3)
+    assert len(m.pages) == 5
+    assert m.n_bytes == 5 * 4096
+    assert space.stats.bytes_mapped == 5 * 4096
+    assert space.stats.table_entries_written == 5
+
+
+def test_unmap_invalidates_only_own_translations():
+    """Regression: unmap() used to epoch-flush the WHOLE TLB, forcing a
+    full re-walk for every other live mapping per completed request; it
+    must drop only the unmapped pages' entries."""
+    space = SVASpace(PagePool(64, 4096))
+    a = space.map(4 * 4096)
+    b = space.map(4 * 4096)
+    assert len(space.tlb) == 8                   # map warms per-page entries
+    space.unmap(a)
+    assert space.tlb.stats.invalidations == 0    # no epoch flush
+    for lp in range(4):
+        assert space.tlb.lookup((b.handle, lp))[1], "b's translations died"
+        assert not space.tlb.lookup((a.handle, lp))[1]
+    space.invalidate_epoch()                     # Listing-1 flush is explicit
+    assert space.tlb.stats.invalidations == 1
+    assert len(space.tlb) == 0
+
+
+# ---------------------------------------------------- CoW prefix sharing
+
+SYS = list(range(200, 216))                      # 2 full pages @ page_size 8
+
+
+def _share_engine_outputs(cfg, params, prompts, share, n=6):
+    eng = ServingEngine(cfg, params, n_slots=4, max_len=64, page_size=8,
+                        prefix_sharing=share)
+    rids = [eng.submit(p, max_tokens=n) for p in prompts]
+    done = eng.run()
+    return [done[r].out_tokens for r in rids], eng.stats()
+
+
+def test_prefix_sharing_bit_identical_to_unshared(key):
+    """Acceptance: shared-prefix admissions prefill only the non-shared
+    suffix (prefill_tokens_saved > 0, pages shared > 0) and decode outputs
+    are bit-identical to unshared serving."""
+    cfg = reduce_for_smoke(get_config("llama3.2-1b"))
+    params = init_params(cfg, key)
+    prompts = [SYS + [5, 9, 2], SYS + [7, 7], SYS + [5, 9, 2], [42, 43]]
+    got_s, ss = _share_engine_outputs(cfg, params, prompts, True)
+    got_u, su = _share_engine_outputs(cfg, params, prompts, False)
+    assert got_s == got_u                        # placement never changes tokens
+    assert ss["prefill_tokens_saved"] > 0
+    assert ss["prefix"]["pages_shared"] > 0
+    assert ss["shared_admissions"] == 2
+    assert ss["cow_page_copies"] > 0             # identical prompt diverged
+    assert su["prefill_tokens_saved"] == 0 and "prefix" not in su
+    assert ss["sva"]["bytes_copied"] == 0        # still zero-copy admission
+
+
+def test_prefix_cache_warm_across_completions(key):
+    """release() leaves prompt pages behind as a warm prefix cache: a later
+    request with the same system prompt maps them via refcount++."""
+    cfg = reduce_for_smoke(get_config("llama3.2-1b"))
+    params = init_params(cfg, key)
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=64, page_size=8)
+    eng.submit(SYS + [1, 2, 3], max_tokens=4)
+    eng.run()
+    assert eng.stats()["pool_used"] > 0          # cache retains pages
+    eng.submit(SYS + [9, 8, 7], max_tokens=4)
+    done = eng.run()
+    s = eng.stats()
+    assert s["prefix"]["hits"] == 1
+    assert s["prefill_tokens_saved"] >= len(SYS)
+    assert all(len(r.out_tokens) == 4 for r in done.values())
+
+
+def test_cow_never_mutates_shared_page():
+    """A CoW duplication must leave the original page untouched and still
+    referenced by the other sharers; only the writer's table changes."""
+    mgr = PagedKVManager(n_slots=3, max_pages_per_slot=8, page_size=4)
+    prompt = list(range(40, 52))                 # 12 tokens: 3 full pages
+    a = mgr.admit(0, 12, 6, tokens=prompt)
+    b = mgr.admit(1, 12, 6, tokens=prompt)
+    assert b.shared_pages == 3 and b.pages[:3] == a.pages[:3]
+    shared_page = a.pages[2]
+    # both write into their own FRESH page 3 first (position 12): no CoW
+    mgr.append_token(0, 1)
+    mgr.append_token(1, 1)
+    assert mgr.pending_cow == []
+    # force a divergence inside the shared region: identical 10-token
+    # prompt c shares a's PARTIAL page; c's first append writes into it
+    mgr2 = PagedKVManager(n_slots=3, max_pages_per_slot=8, page_size=4)
+    p10 = prompt[:10]
+    c = mgr2.admit(0, 10, 6, tokens=p10)
+    d = mgr2.admit(1, 10, 6, tokens=p10)
+    assert d.shared_pages == 3                   # 2 full + partial tail
+    part = c.pages[2]
+    rc_before = mgr2.pool.refcount(part)
+    mgr2.append_token(0, 5)                      # c writes pos 10 -> CoW
+    (src, dst), = mgr2.drain_cow_copies()
+    assert src == part and dst == mgr2.seqs[0].pages[2] != part
+    assert mgr2.seqs[1].pages[2] == part         # sharer untouched
+    assert mgr2.pool.refcount(part) == rc_before - 1
+    assert mgr2.tables[mgr2.seqs[1].slot][2] == part
+    mgr2.pool.check_invariants()
+
+
+def test_prefix_cache_lru_eviction_under_pressure():
+    """OutOfPages pressure evicts warm-cache entries LRU instead of
+    rejecting the admission."""
+    mgr = PagedKVManager(n_slots=2, max_pages_per_slot=4, page_size=4)
+    mgr.admit(0, 8, 8, tokens=list(range(8)))
+    mgr.release(0)
+    assert mgr.prefix.n_cached_pages == 2        # warm full pages
+    assert mgr.admit(1, 8, 8, tokens=list(range(50, 58))) is not None
+    # 8 pages total, 4 live + 2 cached: next 4-page admission must evict
+    assert mgr.admit(2, 8, 8, tokens=list(range(80, 88))) is not None
+    assert mgr.prefix.stats.evictions > 0
+    mgr.pool.check_invariants()
+
+
+def test_engine_pallas_decode_backend_matches_jax(key):
+    """The Pallas paged-decode kernel on the hot path (interpret mode on
+    CPU) produces the same tokens as the pure-JAX gather path."""
+    cfg = reduce_for_smoke(get_config("llama3.2-1b"))
+    params = init_params(cfg, key)
+    prompts = [SYS + [5, 9, 2], [11, 4]]
+
+    def run(backend):
+        eng = ServingEngine(cfg, params, n_slots=2, max_len=32, page_size=8,
+                            decode_backend=backend)
+        rids = [eng.submit(p, max_tokens=4) for p in prompts]
+        done = eng.run()
+        return [done[r].out_tokens for r in rids]
+
+    assert run("pallas") == run("jax")
+
+
 def test_map_tables_rejects_wraparound():
     """Regression: installing a table row into a leaf with fewer pages
     (sliding-window) must raise, not wrap entries modulo the pool size."""
