@@ -33,6 +33,18 @@ def run() -> List[str]:
                 f"paper<={CLAIMS['ptw_llc_max_cycles']:.0f} cycles @1000")
     rows.append(f"fig5.claim.interference,{slow:.0f},"
                 f"paper~{CLAIMS['ptw_interference_slowdown_pct']}%")
+    # IOTLB replacement-policy design space (Kim et al.): the same 4-entry
+    # IOTLB + Sv39 walk through the unified IOMMU API, swapping only
+    # TLBConfig.policy. avg PTW latency @600 host cycles, lru baseline
+    # above.
+    for pol in ("fifo", "lfu", "random"):
+        v = simulate_kernel("axpy", "iommu_llc", 600,
+                            iotlb_policy=pol).avg_ptw_host_cycles
+        rows.append(f"fig5.design.iotlb_policy.{pol},{v:.0f},"
+                    f"host cycles @600 (lru={with_llc[1]:.0f}; axpy streams "
+                    "pages once, so policies tie here — reuse-heavy serving "
+                    "traffic differentiates them, see paged_serving "
+                    "--translation-report)")
     return rows
 
 

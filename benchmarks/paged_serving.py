@@ -12,11 +12,20 @@ Also reports the paged-attention kernel's translation-traffic A/B:
 table-resident-in-SMEM (the paper's LLC-on) vs gather-through-HBM (LLC-off),
 as modeled data movement per decode step.
 
+``--translation-report`` serves a prefix-heavy workload with translation
+tracing ON, then replays the recorded per-decode-step page accesses through
+the unified IOMMU front-end under different design points — ``CountingWalk``
+(pure hit/miss stats) vs ``Sv39Walk(llc=False/True)`` priced like the
+paper's platform — and prints modeled PTW overhead as a % of each decode
+step's accelerator runtime: the Fig. 5 claims, measured on the serving hot
+path instead of the standalone simulator.
+
 ``--dry-run`` runs a minimal-size fast path (CI smoke).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 from typing import List
 
@@ -24,7 +33,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
+from repro.configs.paper_soc import PaperSoCConfig
 from repro.core.serving.engine import ServingEngine
+from repro.core.simulator.platform import H2A
+from repro.core.sva.iommu import IOMMU, CountingWalk, Sv39Walk, TLBConfig
 from repro.models import init_params
 
 
@@ -67,8 +79,11 @@ def _prefix_heavy_prompts(n_req: int, vocab: int):
     return prompts
 
 
-def _run_prefix_workload(share: bool, n_req: int, max_tokens: int):
+def _run_prefix_workload(share: bool, n_req: int, max_tokens: int,
+                         policy: str = "lru", cap_pages: int = 0):
     cfg, params = _cfg_params()
+    cfg = dataclasses.replace(cfg, prefix_cache_policy=policy,
+                              prefix_cache_pages=cap_pages)
     eng = ServingEngine(cfg, params, n_slots=4, max_len=64, page_size=8,
                         prefix_sharing=share)
     prompts = _prefix_heavy_prompts(n_req, cfg.vocab_size)
@@ -149,6 +164,22 @@ def run(dry_run: bool = False) -> List[str]:
                 "the dense prefix-context attention, not the saved tokens; "
                 "the scale-relevant win is prefill_tokens_saved")
 
+    # -------------------------- prefix-cache eviction-policy design space
+    # Same prefix-heavy mix under a tight warm-cache cap (forces eviction
+    # pressure): recency (lru) vs frequency (lfu) — frequency should keep
+    # the popular system prompt resident while one-off prompts churn.
+    cap = 4
+    for policy in ("lru", "lfu"):
+        _, sp, _ = _run_prefix_workload(True, pn, max_tokens,
+                                        policy=policy, cap_pages=cap)
+        ppf = sp["prefix"]
+        rows.append(
+            f"paged_serving.prefix_policy.{policy},{ppf['hits']},"
+            f"admission hits under a {cap}-page warm-cache cap "
+            f"(evictions={ppf['evictions']} "
+            f"tokens_saved={sp['prefill_tokens_saved']} "
+            f"cached_pages={ppf['cached_pages']})")
+
     # translation-traffic A/B per decode step (modeled bytes):
     cfg = get_config("qwen2-7b")
     B, L, page = 128, 32768, 64
@@ -167,9 +198,135 @@ def run(dry_run: bool = False) -> List[str]:
     return rows
 
 
+# ------------------------------------------------------ translation report
+
+def _replay(trace, walk_model, tlb: TLBConfig, kv_bytes_per_token: int,
+            compute_per_token: float, soc: PaperSoCConfig, dram_latency: int):
+    """Feed a recorded serving translation trace through an IOMMU design
+    point. Returns (iommu, per-step list of (ptw_cycles, step_cycles)) in
+    accelerator cycles."""
+    iommu = IOMMU(walk_model=walk_model, tlb=tlb)
+    burst = (dram_latency + soc.dram_base_latency) * H2A
+    per_step = []
+    for ev in trace:
+        if ev[0] == "map":
+            iommu.host_map_pass(ev[1])
+        elif ev[0] == "unmap":
+            _, slot, n_pages = ev
+            iommu.invalidate(pages=[(slot, lp) for lp in range(n_pages)])
+        else:
+            _, accesses, tokens = ev
+            ptw = 0.0
+            for slot, lp, phys in accesses:
+                # translate() re-walks stale hits itself (the recorded phys
+                # is ground truth after a CoW remap)
+                _, cost, _ = iommu.translate(slot, lp, phys=phys)
+                ptw += cost
+            kv_bytes = tokens * kv_bytes_per_token
+            dma = len(accesses) * burst \
+                + kv_bytes / soc.dram_bytes_per_cycle * H2A
+            compute = tokens * compute_per_token
+            # Double-buffered gather hides compute under DMA (or vice
+            # versa); walks serialize in front of their page's burst.
+            per_step.append((ptw, max(compute, dma) + ptw))
+    return iommu, per_step
+
+
+def run_translation_report(dry_run: bool = False,
+                           dram_latency: int = 200) -> List[str]:
+    """Fig. 5 on the serving hot path: serve a prefix-heavy workload with
+    translation tracing, then price the recorded per-decode-step page
+    accesses under CountingWalk vs Sv39Walk(llc=False/True) behind the
+    paper's 4-entry IOTLB."""
+    n_req, max_tokens = (4, 4) if dry_run else (10, 10)
+    cfg, params = _cfg_params()
+    eng = ServingEngine(cfg, params, n_slots=4, max_len=64, page_size=8,
+                        record_translation_trace=True)
+    for p in _prefix_heavy_prompts(n_req, cfg.vocab_size):
+        eng.submit(p, max_tokens=max_tokens)
+    eng.run()
+    trace = eng.translation_trace
+    n_steps = sum(1 for ev in trace if ev[0] == "step")
+
+    soc = PaperSoCConfig()
+    kv_tok = eng.mgr.kv_bytes_per_token
+    n_attn = sum(1 for k in cfg.layer_kinds() if "attn" in k)
+    # decode attention: ~4 flops per KV token per head-dim per layer (qk+av)
+    compute_per_token = 4 * cfg.n_heads * cfg.d_head * n_attn / soc.n_pes
+
+    rows = [f"translation.trace.steps,{n_steps},"
+            f"decode steps recorded ({len(trace)} events; "
+            f"kv_bytes_per_token={kv_tok})"]
+    live = eng.stats()["tlb"]
+    rows.append(f"translation.live_tlb_hit_rate,{live['hit_rate']},"
+                f"serving IOMMU (4096-entry CountingWalk) on live traffic: "
+                f"hits={live['hits']} walks={live['walks']}")
+
+    def replay(model_factory, tlb_entries):
+        return _replay(trace, model_factory(), TLBConfig(tlb_entries, "lru"),
+                       kv_tok, compute_per_token, soc, dram_latency)
+
+    counting, _ = replay(CountingWalk, soc.iotlb_entries)
+    cstats = counting.stats()["tlb"]
+    rows.append(f"translation.iotlb_hit_rate,{cstats['hit_rate']},"
+                f"paper's {soc.iotlb_entries}-entry IOTLB replaying the "
+                f"same trace: walks={cstats['walks']} (CountingWalk)")
+
+    mk_off = lambda: Sv39Walk(levels=soc.ptw_levels,
+                              dram_access_cycles=dram_latency
+                              + soc.dram_base_latency,
+                              llc=False, to_accel=H2A)
+    mk_on = lambda: Sv39Walk(levels=soc.ptw_levels,
+                             dram_access_cycles=dram_latency
+                             + soc.dram_base_latency,
+                             llc=True, to_accel=H2A)
+    _, off_steps = replay(mk_off, soc.iotlb_entries)
+    _, on_steps = replay(mk_on, soc.iotlb_entries)
+
+    pct = lambda p, t: 100.0 * p / max(t, 1e-9)
+    for i, ((po, to), (pl, tl)) in enumerate(zip(off_steps, on_steps)):
+        rows.append(f"translation.step.{i:03d},{pct(po, to):.1f},"
+                    f"% of decode-step runtime spent in PTW, LLC off "
+                    f"(LLC on: {pct(pl, tl):.2f}%)")
+    off_pcts = [pct(p, t) for p, t in off_steps]
+    on_pcts = [pct(p, t) for p, t in on_steps]
+    rows.append(f"translation.ptw_pct.llc_off.mean,"
+                f"{np.mean(off_pcts):.1f},paper Fig.4/5 band: 4.2-17.6% "
+                "(serving gathers translate EVERY page each step — no "
+                "tile-level reuse, so a 4-entry IOTLB thrashes)")
+    rows.append(f"translation.ptw_pct.llc_off.max,{max(off_pcts):.1f},"
+                "worst decode step")
+    rows.append(f"translation.ptw_pct.llc_on.mean,{np.mean(on_pcts):.2f},"
+                "paper: 0.4-0.7% with LLC-resident PTEs")
+    rows.append(f"translation.ptw_pct.llc_on.max,{max(on_pcts):.2f},"
+                "worst decode step")
+    rows.append(f"translation.claim.llc_reduction,"
+                f"{np.mean(off_pcts)/max(np.mean(on_pcts), 1e-9):.0f},"
+                "x lower PTW share of decode runtime with the shared LLC "
+                "(paper Fig.5: ~15x walk-latency reduction)")
+
+    # Design-space row (Kim et al.): the serving-sized TLB makes the walker
+    # model irrelevant — translation maintenance becomes delta uploads.
+    _, big_off = replay(mk_off, 4096)
+    big = [pct(p, t) for p, t in big_off]
+    rows.append(f"translation.ptw_pct.llc_off.tlb4096.mean,"
+                f"{np.mean(big):.2f},same trace, serving-sized TLB: "
+                "cold-miss walks only (design-space axis: IOTLB size)")
+    return rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry-run", action="store_true",
                     help="minimal sizes (CI smoke path)")
+    ap.add_argument("--translation-report", action="store_true",
+                    help="replay the serving translation trace through "
+                         "Sv39Walk(llc on/off): per-decode-step PTW %%")
+    ap.add_argument("--dram-latency", type=int, default=200,
+                    help="AXI delayer setting for the Sv39 walk replay")
     args = ap.parse_args()
-    print("\n".join(run(dry_run=args.dry_run)))
+    if args.translation_report:
+        print("\n".join(run_translation_report(
+            dry_run=args.dry_run, dram_latency=args.dram_latency)))
+    else:
+        print("\n".join(run(dry_run=args.dry_run)))

@@ -18,7 +18,8 @@ from repro.models import init_params
 cfg = reduce_for_smoke(get_config("qwen2-7b"))
 params = init_params(cfg, jax.random.key(0))
 eng = ServingEngine(cfg, params, n_slots=4, max_len=128, page_size=8,
-                    offload_mode="zero_copy")
+                    offload_mode="zero_copy",
+                    translation_stats=True)   # live IOTLB hit/miss counting
 
 rng = np.random.default_rng(0)
 system = rng.integers(0, cfg.vocab_size, size=16).tolist()  # shared prefix
@@ -41,6 +42,8 @@ print(f"\n{s['tokens']} tokens, {s['decode_steps']} decode steps, "
       f"{s['prefills']} prefills")
 print(f"SVA: {s['sva']}")
 print(f"TLB: {s['tlb']}")
+print(f"IOMMU: {s['iommu']}  (unified front-end; the simulator's 4-entry "
+      "IOTLB is the same class)")
 print(f"prefix cache: {s['prefix']}")
 print(f"prefill tokens saved: {s['prefill_tokens_saved']} "
       f"(shared admissions: {s['shared_admissions']}); "

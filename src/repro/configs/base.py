@@ -98,6 +98,11 @@ class ModelConfig:
     # (kernels/paged_attention scalar-prefetch kernel on the decode hot
     # path — interpret-mode off-TPU, real kernel on TPU).
     decode_backend: str = "jax"
+    # Warm prefix-cache tuning (serving): eviction policy of the
+    # cross-request PrefixIndex and an optional cap on the pages it may
+    # retain after release (0 = bounded only by pool pressure).
+    prefix_cache_policy: str = "lru"        # lru | lfu
+    prefix_cache_pages: int = 0
 
     def __post_init__(self):
         if self.d_head == 0:
@@ -106,6 +111,14 @@ class ModelConfig:
             raise ValueError(
                 f"{self.name}: decode_backend={self.decode_backend!r} "
                 "(expected 'jax' or 'pallas')")
+        if self.prefix_cache_policy not in ("lru", "lfu"):
+            raise ValueError(
+                f"{self.name}: prefix_cache_policy="
+                f"{self.prefix_cache_policy!r} (expected 'lru' or 'lfu')")
+        if self.prefix_cache_pages < 0:
+            raise ValueError(
+                f"{self.name}: prefix_cache_pages={self.prefix_cache_pages} "
+                "(must be >= 0; 0 = uncapped)")
         blk = len(self.block_pattern)
         body = self.n_layers - self.first_k_dense
         if body % blk != 0:

@@ -221,7 +221,9 @@ class ServingEngine:
                  offload_mode: str = "zero_copy", src_len: int = 16,
                  eos_token: Optional[int] = None,
                  prefix_sharing: bool = True,
-                 decode_backend: Optional[str] = None):
+                 decode_backend: Optional[str] = None,
+                 record_translation_trace: bool = False,
+                 translation_stats: bool = False):
         if decode_backend is not None:
             cfg = dataclasses.replace(cfg, decode_backend=decode_backend)
         self.cfg, self.params, self.mi = cfg, params, mi
@@ -243,7 +245,20 @@ class ServingEngine:
         self.mgr = PagedKVManager(n_slots, self.max_pages, page_size,
                                   kv_bytes_per_token=kv_bytes,
                                   offload_mode=offload_mode,
-                                  prefix_sharing=self._can_share)
+                                  prefix_sharing=self._can_share,
+                                  prefix_policy=cfg.prefix_cache_policy,
+                                  prefix_cap_pages=cfg.prefix_cache_pages)
+        # Translation trace: ("map", fresh_pages) at admission (Listing-1
+        # host map pass) and ("step", accesses, tokens_read) per decode step
+        # — replayable through any IOMMU walk model (see
+        # benchmarks/paged_serving.py --translation-report).
+        # ``translation_stats`` runs every decode step's page gathers
+        # through the manager's IOMMU (live IOTLB hit/miss signal) — a
+        # host-side Python sweep over resident pages, so it is opt-in and
+        # implied by tracing; the default hot path pays nothing.
+        self.translation_trace: Optional[List[tuple]] = \
+            [] if record_translation_trace else None
+        self._translation_stats = translation_stats or record_translation_trace
         self.queue: deque = deque()
         self.active: Dict[int, Request] = {}
         self._next_id = 0
@@ -317,7 +332,11 @@ class ServingEngine:
                         if self.mgr.seqs[r].done]:
                 req = self.active.pop(rid)
                 req.done_at = time.perf_counter()
-                req.out_tokens = self.mgr.seqs[rid].tokens
+                st = self.mgr.seqs[rid]
+                req.out_tokens = st.tokens
+                if self.translation_trace is not None:
+                    self.translation_trace.append(
+                        ("unmap", st.slot, len(st.pages)))
                 self.mgr.release(rid)
                 finished[rid] = req
         return finished
@@ -346,6 +365,11 @@ class ServingEngine:
                 self._prefill_into_slot(req, st.slot)
                 self.active[req.req_id] = req
                 continue
+            if self.translation_trace is not None:
+                # Listing-1 map pass over the freshly allocated pages
+                # (shared prefix pages were mapped by their provider).
+                self.translation_trace.append(
+                    ("map", list(st.pages[st.shared_pages:])))
             admitted.append((req, st))
         if not admitted:
             return
@@ -523,6 +547,10 @@ class ServingEngine:
         pairs = self.mgr.drain_cow_copies()
         if not pairs:
             return
+        if self.translation_trace is not None:
+            # A CoW remap is a fresh mapping: the host map pass warms the
+            # duplicated pages' PTE lines before the device touches them.
+            self.translation_trace.append(("map", [d for _, d in pairs]))
         n = 1
         while n < len(pairs):
             n *= 2
@@ -577,6 +605,14 @@ class ServingEngine:
             self._apply_cow()       # duplicated pages must exist before the
                                     # decode writes/reads through new tables
             self._upload_tables()
+            if self._translation_stats:
+                # Run this step's page gathers through the IOMMU front-end:
+                # the live-traffic IOTLB hit/miss signal (CountingWalk), and
+                # the trace --translation-report replays through Sv39Walk.
+                accesses = self.mgr.translate_step()
+                if self.translation_trace is not None:
+                    self.translation_trace.append(
+                        ("step", accesses, int(kv_len.sum())))
             logits, self.cache = self._decode(
                 self.params, jnp.asarray(last), pos, self._tables_dev,
                 self.cache)

@@ -6,12 +6,15 @@ domain and are converted with H2A = 20/50.
 
 Components modeled:
   * DRAM with the parametrizable AXI delayer (+L cycles on b/r channels)
-  * the 4-entry IOTLB + 3-level sequential PTW (RISC-V IOMMU, Sv39)
-  * the 128 KiB shared LLC that caches ONLY host + PTW traffic (DMA bypasses
-    via the address-offset muxes of Fig. 1) — modeled as a resident-set of
-    PTE cache lines filled by the host mapping pass (paper Listing 1 flushes
-    then maps, so PTEs are LLC-resident at offload time)
-  * host-interference evictions (Fig. 5's concurrent-traffic experiment)
+  * translation is delegated ENTIRELY to the unified IOMMU front-end
+    (core/sva/iommu.py): the 4-entry IOTLB is ``TLBConfig(4, policy)`` and
+    the 3-level sequential PTW (RISC-V IOMMU, Sv39) with its LLC-aware walk
+    costs is ``Sv39Walk`` — the 128 KiB shared LLC caches ONLY host + PTW
+    traffic (DMA bypasses via the address-offset muxes of Fig. 1), modeled
+    as a resident-set of PTE cache lines filled by the host mapping pass
+    (paper Listing 1 flushes then maps, so PTEs are LLC-resident at offload
+    time), with host-interference evictions (Fig. 5's concurrent-traffic
+    experiment)
   * the Snitch cluster double-buffered DMA execution: per tile,
     runtime += max(compute, dma); exposed DMA is the paper's "DMA region".
 """
@@ -24,7 +27,7 @@ from typing import Iterable, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.paper_soc import PaperSoCConfig
-from repro.core.sva.tlb import TranslationCache
+from repro.core.sva.iommu import IOMMU, Sv39Walk, TLBConfig
 
 H2A = 20.0 / 50.0     # host-domain cycles -> accelerator cycles
 
@@ -39,6 +42,7 @@ class SimConfig:
     llc_hit_cycles: int = 10          # host cycles for an LLC hit
     pte_evict_prob: float = 0.10      # baseline leaf-PTE eviction (128 KiB LLC
                                       # shared with OS data between map & use)
+    iotlb_policy: str = "lru"         # IOTLB replacement (design-space axis)
     seed: int = 0
 
 
@@ -77,12 +81,31 @@ class Tile:
 
 
 class MemorySystem:
+    """DRAM timing + the platform's IOMMU (the unified front-end configured
+    as the paper's hardware: 4-entry IOTLB, Sv39 walker with LLC-aware
+    costs). Translation state lives in ``self.iommu``; this class only adds
+    the DRAM/DMA cycle accounting around it."""
+
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
         self.soc = cfg.soc
-        self.rng = np.random.default_rng(cfg.seed)
-        self.iotlb = TranslationCache(self.soc.iotlb_entries)
-        self.llc_resident: set = set()  # PTE line ids resident in LLC
+        self.iommu = IOMMU(
+            walk_model=Sv39Walk(
+                levels=self.soc.ptw_levels,
+                dram_access_cycles=self.dram_access_host(),
+                llc=cfg.llc,
+                llc_hit_cycles=cfg.llc_hit_cycles,
+                pte_evict_prob=cfg.pte_evict_prob,
+                host_interference=cfg.host_interference,
+                to_accel=H2A,
+                seed=cfg.seed),
+            tlb=TLBConfig(self.soc.iotlb_entries, cfg.iotlb_policy,
+                          seed=cfg.seed))
+
+    @property
+    def iotlb(self):
+        """The hardware IOTLB (the IOMMU's translation cache)."""
+        return self.iommu.tlb
 
     # ------------------------------------------------------------ basics
     def dram_access_host(self) -> float:
@@ -96,38 +119,16 @@ class MemorySystem:
         """Pipelined data beats: 8 B per host cycle."""
         return n_bytes / self.soc.dram_bytes_per_cycle * H2A
 
-    # ------------------------------------------------------------ mapping
+    # ------------------------------------------------------ translation
     def host_map_pass(self, pages: Iterable[int]) -> None:
         """Host creates IO mappings right before offload (Listing 1): the PTE
         cache lines land in the LLC (8 PTEs of 8 B per 64 B line)."""
-        if self.cfg.llc:
-            for p in set(pages):
-                self.llc_resident.add(p // 8)
-
-    # ------------------------------------------------------------ PTW
-    def ptw_cost_accel(self, page: int) -> float:
-        """One full page-table walk: up to 3 sequential accesses."""
-        total_host = 0.0
-        evict_p = self.cfg.pte_evict_prob + self.cfg.host_interference
-        for level in range(self.soc.ptw_levels):
-            line = page // 8 if level == self.soc.ptw_levels - 1 else -level
-            cached = self.cfg.llc and (
-                line in self.llc_resident or level < self.soc.ptw_levels - 1)
-            if cached and level == self.soc.ptw_levels - 1 and \
-                    self.rng.random() < evict_p:
-                cached = False        # PTE line evicted between map and walk
-            total_host += (self.cfg.llc_hit_cycles if cached
-                           else self.dram_access_host())
-        return total_host * H2A
+        self.iommu.host_map_pass(pages)
 
     def translate(self, page: int) -> Tuple[float, bool]:
         """IOTLB lookup; returns (accel cycles, hit)."""
-        _, hit = self.iotlb.lookup(page)
-        if hit:
-            return 0.0, True
-        cost = self.ptw_cost_accel(page)
-        self.iotlb.fill(page, page)
-        return cost, False
+        _, cost, hit = self.iommu.translate(0, page)
+        return cost, hit
 
 
 def run_kernel(tiles: List[Tile], cfg: SimConfig,

@@ -1,19 +1,29 @@
-"""Shared-virtual-address layer: page pool, host mapping API, IOTLB model,
-and the paged KV manager binding them to the serving engine.
+"""Shared-virtual-address layer: page pool, the unified IOMMU translation
+front-end, host mapping API, and the paged KV manager binding them to the
+serving engine.
 
-Prefix sharing + copy-on-write: :class:`PrefixIndex` (kv_manager) gives the
-pool RadixAttention-style content addressing — admissions map an already-
+One translation implementation serves every client
+(:class:`~repro.core.sva.iommu.IOMMU`): the performance simulator attaches
+a 4-entry ``lru`` IOTLB over the ``Sv39Walk`` cost model, the serving
+engine a large delta-upload cache over ``CountingWalk`` — same class,
+different :class:`~repro.core.sva.iommu.TLBConfig`. Prefix sharing +
+copy-on-write: :class:`PrefixIndex` (kv_manager) gives the pool
+RadixAttention-style content addressing — admissions map an already-
 resident prompt prefix via refcount++ (zero-copy across *requests*, the
 paper's map-don't-copy result one level up), writes into shared pages CoW,
-and released prompts persist as a warm prefix cache with LRU eviction.
+and released prompts persist as a warm prefix cache with policy-pluggable
+(lru/lfu, optionally capped) eviction.
 """
+from repro.core.sva.iommu import (IOMMU, CountingWalk, IOAddressSpace,
+                                  Sv39Walk, TLBConfig, WalkModel, WalkStats)
 from repro.core.sva.kv_manager import (CapacityError, PagedKVManager,
                                        PrefixIndex, PrefixStats, SeqState)
 from repro.core.sva.mapping import Mapping, SVASpace, SVAStats
 from repro.core.sva.page_pool import OutOfPages, PagePool, PoolStats
 from repro.core.sva.tlb import TLBStats, TranslationCache
 
-__all__ = ["CapacityError", "Mapping", "OutOfPages", "PagePool",
-           "PagedKVManager", "PoolStats", "PrefixIndex", "PrefixStats",
-           "SVASpace", "SVAStats", "SeqState", "TLBStats",
-           "TranslationCache"]
+__all__ = ["CapacityError", "CountingWalk", "IOAddressSpace", "IOMMU",
+           "Mapping", "OutOfPages", "PagePool", "PagedKVManager",
+           "PoolStats", "PrefixIndex", "PrefixStats", "SVASpace", "SVAStats",
+           "SeqState", "Sv39Walk", "TLBConfig", "TLBStats",
+           "TranslationCache", "WalkModel", "WalkStats"]

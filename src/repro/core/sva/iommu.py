@@ -1,0 +1,354 @@
+"""Unified IOMMU front-end — ONE translation API for the performance
+simulator, the SVA mapping layer, and the serving engine.
+
+The paper's central object is an IOMMU with an IOTLB, a multi-level
+page-table walker, and LLC-aware walk costs. This module is its single
+implementation; everything else is a client:
+
+  * the simulator's :class:`~repro.core.simulator.platform.MemorySystem`
+    delegates translation to ``IOMMU(walk_model=Sv39Walk(...),
+    tlb=TLBConfig(4))`` — the paper's 4-entry hardware IOTLB over the
+    3-level sequential Sv39 walk with Listing-1 LLC warming;
+  * :class:`~repro.core.sva.mapping.SVASpace` attaches one
+    :class:`IOAddressSpace` per mapping handle (PASID-style);
+  * :class:`~repro.core.sva.kv_manager.PagedKVManager` attaches one
+    address space per batch slot and runs the decode hot path's page
+    accesses through a ``CountingWalk`` IOMMU with a large TLB — the
+    delta-upload cache and the hardware IOTLB are the same class
+    configured differently.
+
+Design-space axes (Kim et al., "Address Translation Design Tradeoffs for
+Heterogeneous Systems"): TLB size and replacement policy
+(``TLBConfig(n_entries, policy)`` — lru | fifo | lfu | random) and walker
+cost model (``WalkModel``) are independently pluggable, so the same traffic
+can be priced as pure stats (``CountingWalk``) or as modeled Sv39 cycles
+with/without the shared LLC (``Sv39Walk``).
+
+No module outside this one constructs a raw
+:class:`~repro.core.sva.tlb.TranslationCache`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import (Dict, Iterable, List, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
+
+import numpy as np
+
+from repro.core.sva.tlb import POLICIES, TLBStats, TranslationCache
+
+
+@dataclass(frozen=True)
+class TLBConfig:
+    """IOTLB geometry + replacement policy (the translation design space)."""
+    n_entries: int = 4096
+    policy: str = "lru"           # lru | fifo | lfu | random
+    seed: int = 0                 # random-policy determinism (trace parity)
+
+    def __post_init__(self):
+        if self.n_entries < 1:
+            raise ValueError(f"n_entries={self.n_entries} (need >= 1)")
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"policy={self.policy!r} (expected one of {POLICIES})")
+
+
+@dataclass
+class WalkStats:
+    walks: int = 0                # page-table walks performed
+    cycles: float = 0.0           # total modeled walk cost (model's units)
+
+    def as_dict(self):
+        return dict(walks=self.walks, cycles=round(self.cycles, 3))
+
+
+@runtime_checkable
+class WalkModel(Protocol):
+    """Prices one page-table walk; the *value* of a translation always comes
+    from the owning :class:`IOAddressSpace`'s table, never from the model."""
+
+    name: str
+    stats: WalkStats
+
+    def walk(self, asid: int, page: int) -> float:
+        """Cost of a full walk for ``page`` (physical id). Returns cycles."""
+        ...
+
+    def host_map_pass(self, pages: Iterable[int]) -> None:
+        """Host creates IO mappings right before offload (paper Listing 1);
+        cost models may warm PTE state (LLC residency)."""
+        ...
+
+
+class CountingWalk:
+    """Pure-stats walker (zero cost) — the serving engine's live-traffic
+    hit/miss/walk counter."""
+
+    name = "counting"
+
+    def __init__(self):
+        self.stats = WalkStats()
+
+    def walk(self, asid: int, page: int) -> float:
+        self.stats.walks += 1
+        return 0.0
+
+    def host_map_pass(self, pages: Iterable[int]) -> None:
+        return None
+
+
+class Sv39Walk:
+    """The 3-level sequential-access RISC-V Sv39 walk cost model (paper
+    Fig. 5), lifted out of the simulator's ``MemorySystem.ptw_cost_accel``.
+
+    The 128 KiB shared LLC caches ONLY host + PTW traffic: the Listing-1
+    ``host_map_pass`` fills PTE cache lines (8 PTEs of 8 B per 64 B line),
+    so leaf PTEs are LLC-resident at offload time. ``host_interference``
+    adds the Fig.-5 concurrent-traffic eviction probability on top of the
+    baseline ``pte_evict_prob`` (LLC shared with OS data between map and
+    use). Costs are returned in ``dram_access_cycles``'s clock domain
+    scaled by ``to_accel`` (the simulator passes host->accelerator H2A).
+    """
+
+    name = "sv39"
+
+    def __init__(self, levels: int = 3, dram_access_cycles: float = 235.0,
+                 llc: bool = False, llc_hit_cycles: float = 10.0,
+                 pte_evict_prob: float = 0.10, host_interference: float = 0.0,
+                 to_accel: float = 1.0, seed: int = 0):
+        self.levels = levels
+        self.dram_access_cycles = dram_access_cycles
+        self.llc = llc
+        self.llc_hit_cycles = llc_hit_cycles
+        self.pte_evict_prob = pte_evict_prob
+        self.host_interference = host_interference
+        self.to_accel = to_accel
+        self.llc_resident: set = set()      # PTE line ids resident in LLC
+        self._rng = np.random.default_rng(seed)
+        self.stats = WalkStats()
+
+    def host_map_pass(self, pages: Iterable[int]) -> None:
+        if self.llc:
+            for p in set(pages):
+                self.llc_resident.add(p // 8)
+
+    def walk(self, asid: int, page: int) -> float:
+        """One full page-table walk: up to ``levels`` sequential accesses.
+        Upper levels are few enough to stay cached; the leaf PTE line is
+        cached iff the map pass warmed it and no eviction hit it since."""
+        total_host = 0.0
+        evict_p = self.pte_evict_prob + self.host_interference
+        for level in range(self.levels):
+            line = page // 8 if level == self.levels - 1 else -level
+            cached = self.llc and (
+                line in self.llc_resident or level < self.levels - 1)
+            if cached and level == self.levels - 1 and \
+                    self._rng.random() < evict_p:
+                cached = False        # PTE line evicted between map and walk
+            total_host += (self.llc_hit_cycles if cached
+                           else self.dram_access_cycles)
+        cost = total_host * self.to_accel
+        self.stats.walks += 1
+        self.stats.cycles += cost
+        return cost
+
+
+class IOAddressSpace:
+    """A PASID-style per-process/per-request address space: a logical->
+    physical page table plus the translation verbs over it. Obtained via
+    :meth:`IOMMU.attach`; all TLB state lives in the owning IOMMU (shared,
+    keyed ``(asid, logical_page)``)."""
+
+    def __init__(self, iommu: "IOMMU", asid: int):
+        self.iommu = iommu
+        self.asid = asid
+        self.table: Dict[int, int] = {}
+        # True once a TLB entry exists for a page NOT in the table (identity
+        # fallback / caller-supplied phys): detach must then fall back to a
+        # full-ASID scan instead of the O(mapped pages) table walk.
+        self._untracked_fills = False
+
+    # ------------------------------------------------------------- mapping
+    def map(self, pages: Sequence[int], start: int = 0,
+            warm: bool = True) -> None:
+        """Install logical pages ``[start, start+len)`` -> ``pages`` and run
+        the Listing-1 host map pass (PTE writes land in the LLC). ``warm``
+        additionally pre-fills the device TLB (the driver's map-then-offload
+        pattern leaves translations hot)."""
+        for lp, pp in enumerate(pages, start=start):
+            self.table[lp] = pp
+            if warm:
+                # host pre-warm, NOT a device page-table walk
+                self.iommu.tlb.fill((self.asid, lp), pp, walked=False)
+        self.iommu.host_map_pass(pages)
+
+    def extend(self, pages: Sequence[int]) -> None:
+        """Grow the mapping (decode appends crossing a page boundary)."""
+        self.map(pages, start=len(self.table))
+
+    def remap(self, lp: int, pp: int) -> None:
+        """Point one logical page at a new physical page (CoW divergence):
+        the stale translation self-invalidates, the new one is warmed."""
+        self.table[lp] = pp
+        self.iommu.tlb.invalidate_key((self.asid, lp))
+        self.iommu.tlb.fill((self.asid, lp), pp, walked=False)
+        self.iommu.host_map_pass([pp])
+
+    def unmap(self, lps: Optional[Iterable[int]] = None) -> None:
+        """Tear down translations — ONLY this space's (per-key
+        self-invalidation; other ASIDs stay warm). ``lps=None`` unmaps the
+        whole space."""
+        if lps is None:
+            self.table.clear()
+            self.iommu.invalidate(asid=self.asid)
+            return
+        for lp in lps:
+            self.table.pop(lp, None)
+        self.iommu.invalidate(pages=[(self.asid, lp) for lp in lps])
+
+    # --------------------------------------------------------- translation
+    def translate(self, lp: int) -> Tuple[int, float, bool]:
+        """(physical page, walk cost, hit)."""
+        return self.iommu.translate(self.asid, lp)
+
+    def invalidate(self, lps: Optional[Iterable[int]] = None) -> None:
+        """Drop this space's TLB entries (table survives — a re-walk will
+        re-derive them)."""
+        if lps is None:
+            self.iommu.invalidate(asid=self.asid)
+        else:
+            self.iommu.invalidate(pages=[(self.asid, lp) for lp in lps])
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.table)
+
+
+class IOMMU:
+    """The translation front-end: one shared IOTLB + one walk cost model,
+    many attached address spaces (ASIDs)."""
+
+    def __init__(self, walk_model: Optional[WalkModel] = None,
+                 tlb: TLBConfig = TLBConfig()):
+        self.walk_model: WalkModel = walk_model or CountingWalk()
+        self.tlb_config = tlb
+        self.tlb = TranslationCache(tlb.n_entries, policy=tlb.policy,
+                                    seed=tlb.seed)
+        self.epoch = 0
+        self._spaces: Dict[int, IOAddressSpace] = {}
+
+    # ----------------------------------------------------------- lifecycle
+    def attach(self, asid: int) -> IOAddressSpace:
+        """Create the per-process/per-request address space for ``asid``."""
+        if asid in self._spaces:
+            raise ValueError(f"asid {asid} already attached")
+        sp = IOAddressSpace(self, asid)
+        self._spaces[asid] = sp
+        return sp
+
+    def detach(self, asid: int) -> None:
+        """Destroy an address space, self-invalidating ONLY its own
+        translations (a whole-TLB flush per teardown would force a full
+        re-walk for every OTHER live space — the Listing-1 full flush is
+        ``invalidate()``). Costs O(mapped pages), not O(TLB entries): the
+        space's table already enumerates its logical pages."""
+        sp = self._spaces.pop(asid, None)
+        if sp is None:
+            return
+        if sp._untracked_fills:
+            self.invalidate(asid=asid)           # full scan, rare
+        else:
+            self.invalidate(pages=[(asid, lp) for lp in sp.table])
+        sp.table.clear()
+
+    def space(self, asid: int) -> Optional[IOAddressSpace]:
+        return self._spaces.get(asid)
+
+    @property
+    def n_spaces(self) -> int:
+        return len(self._spaces)
+
+    # --------------------------------------------------------- translation
+    def translate(self, asid: int, page: int,
+                  phys: Optional[int] = None) -> Tuple[int, float, bool]:
+        """IOTLB lookup; walks the page table on miss.
+
+        Returns (physical page, walk cost, hit). ``phys`` overrides the
+        table-derived value (trace replay: the recorded access already knows
+        its physical page); a hit whose cached value contradicts it is by
+        definition stale (a remap the replay never saw invalidate) and is
+        re-walked, like the hardware would after the remap's invalidation.
+        Unattached ASIDs translate identity — the simulator drives raw page
+        ids without building tables; for an ATTACHED space a missing table
+        entry is a caller error (a walk of a hole would cache a bogus
+        translation in the shared TLB) and raises.
+        """
+        val, hit = self.tlb.lookup((asid, page))
+        if hit and phys is not None and val != phys:
+            self.tlb.stats.hits -= 1             # stale: account as a miss
+            self.tlb.stats.misses += 1
+            self.tlb.invalidate_key((asid, page))
+            hit = False
+        if hit:
+            return val, 0.0, True
+        sp = self._spaces.get(asid)
+        if phys is None:
+            if sp is not None:
+                if page not in sp.table:
+                    raise KeyError(
+                        f"asid {asid}: logical page {page} is not mapped")
+                phys = sp.table[page]
+            else:
+                phys = page
+        cost = self.walk_model.walk(asid, phys)
+        self.tlb.fill((asid, page), phys)
+        if sp is not None and page not in sp.table:
+            sp._untracked_fills = True
+        return phys, cost, False
+
+    def host_map_pass(self, pages: Iterable[int]) -> None:
+        """Paper Listing 1: the host maps right before offload; the walk
+        model may warm PTE state."""
+        self.walk_model.host_map_pass(pages)
+
+    # -------------------------------------------------------- invalidation
+    def invalidate(self, asid: Optional[int] = None,
+                   pages: Optional[Iterable[Tuple[int, int]]] = None) -> None:
+        """Three granularities (the paper's invalidation interface):
+
+          invalidate()                 full flush; bumps the epoch EXACTLY
+                                       once (Listing-1 self-invalidation —
+                                       the next table upload must be full)
+          invalidate(asid=a)           drop every translation of one space
+          invalidate(pages=[(a, lp)])  drop specific translations
+        """
+        if pages is not None:
+            for key in pages:
+                self.tlb.invalidate_key(key)
+            return
+        if asid is not None:
+            for key in self.tlb.keys():
+                if key[0] == asid:
+                    self.tlb.invalidate_key(key)
+            return
+        self.tlb.invalidate()
+        self.epoch += 1
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """The unified translation stats schema every layer reports:
+
+          tlb    hits / misses / evictions / invalidations / walks / hit_rate
+          walk   model name + walks / cycles (modeled cost)
+          epoch  full-flush count
+          asids  live address spaces
+        """
+        return {"tlb": self.tlb.stats.as_dict(),
+                "walk": {"model": self.walk_model.name,
+                         **self.walk_model.stats.as_dict()},
+                "epoch": self.epoch,
+                "asids": self.n_spaces}
+
+
+__all__ = ["CountingWalk", "IOAddressSpace", "IOMMU", "Sv39Walk",
+           "TLBConfig", "WalkModel", "WalkStats"]

@@ -31,11 +31,17 @@ only drops the sequence's own references, so prefix pages survive completion
 as a warm prefix cache; the index LRU-evicts leaf entries when the pool runs
 dry.
 
-Delta-upload bookkeeping: rows whose tables changed since the last device
-upload accumulate in ``dirty_rows`` and are drained with ``delta_rows()`` —
-the serving-level analogue of a warm IOTLB. ``invalidate_epoch()`` models
-the paper's Listing-1 flush: every translation dies and the next upload must
-be a full-table upload.
+Translation goes through the unified :class:`~repro.core.sva.iommu.IOMMU`
+front-end: one PASID-style address space per batch slot, a large
+``CountingWalk`` TLB (the delta-upload cache), and ``translate_step()``
+running every decode step's page gathers through it — the live-traffic
+counterpart of the simulator's 4-entry hardware IOTLB (same class,
+different ``TLBConfig``). Delta-upload bookkeeping: rows whose tables
+changed since the last device upload accumulate in ``dirty_rows`` and are
+drained with ``delta_rows()`` — the serving-level analogue of a warm IOTLB.
+``invalidate_epoch()`` models the paper's Listing-1 flush: every
+translation dies (the IOMMU epoch bumps exactly once) and the next upload
+must be a full-table upload.
 """
 from __future__ import annotations
 
@@ -44,9 +50,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.sva.mapping import SVASpace
+from repro.core.sva.iommu import IOMMU, CountingWalk, TLBConfig
+from repro.core.sva.mapping import SVAStats
 from repro.core.sva.page_pool import OutOfPages, PagePool
-from repro.core.sva.tlb import TranslationCache
 
 
 class CapacityError(ValueError):
@@ -71,10 +77,12 @@ class _PrefixNode:
     """One FULL page of prompt tokens in the content-addressed radix chain.
 
     Children are keyed by the NEXT page's token tuple; ``partials`` caches
-    partially-filled tail pages (content tuple -> page id). Every node and
-    every partial entry owns exactly one pool reference on its page."""
+    partially-filled tail pages (content tuple -> [page, lru, uses]). Every
+    node and every partial entry owns exactly one pool reference on its
+    page."""
 
-    __slots__ = ("page", "parent", "key", "children", "partials", "last_used")
+    __slots__ = ("page", "parent", "key", "children", "partials",
+                 "last_used", "uses")
 
     def __init__(self, page: Optional[int], parent: Optional["_PrefixNode"],
                  key: Optional[Tuple[int, ...]]):
@@ -82,8 +90,9 @@ class _PrefixNode:
         self.parent = parent
         self.key = key
         self.children: Dict[Tuple[int, ...], _PrefixNode] = {}
-        self.partials: Dict[Tuple[int, ...], List] = {}   # content -> [page, lru]
+        self.partials: Dict[Tuple[int, ...], List] = {}  # content -> [page, lru, uses]
         self.last_used = 0
+        self.uses = 0
 
 
 @dataclass
@@ -102,12 +111,28 @@ class PrefixStats:
                     evictions=self.evictions, steals=self.steals)
 
 
+PREFIX_POLICIES = ("lru", "lfu")
+
+
 class PrefixIndex:
     """Longest-shared-prefix lookup over admitted prompts, token-hash per
-    full page (plus one cached partial tail page per prompt)."""
+    full page (plus one cached partial tail page per prompt).
 
-    def __init__(self, page_size: int):
+    Eviction under page pressure is policy-pluggable (``lru`` recency /
+    ``lfu`` frequency — frequency keeps a popular system prompt resident
+    even when a burst of one-off prompts churns the pool), and
+    ``max_pages`` caps the warm cache's footprint: after every admission
+    the index sheds entries it solely owns until it fits (live sequences'
+    pages never count against eviction — freeing them returns nothing)."""
+
+    def __init__(self, page_size: int, policy: str = "lru",
+                 max_pages: int = 0):
+        if policy not in PREFIX_POLICIES:
+            raise ValueError(
+                f"policy={policy!r} (expected one of {PREFIX_POLICIES})")
         self.page_size = page_size
+        self.policy = policy
+        self.max_pages = max_pages          # 0 = uncapped
         self.root = _PrefixNode(None, None, None)
         self._clock = 0
         self._partial_by_page: Dict[int, Tuple[_PrefixNode, Tuple[int, ...]]] = {}
@@ -141,6 +166,7 @@ class PrefixIndex:
             if child is None:
                 break
             child.last_used = now
+            child.uses += 1
             pages.append(child.page)
             node = child
             i += p
@@ -149,6 +175,7 @@ class PrefixIndex:
         if rem and rem in node.partials:
             entry = node.partials[rem]
             entry[1] = now
+            entry[2] += 1
             pages.append(entry[0])
             matched += len(rem)
         return pages, matched
@@ -170,6 +197,7 @@ class PrefixIndex:
             child = node.children.get(key)
             if child is None:
                 child = _PrefixNode(pages[li], node, key)
+                child.uses = 1            # the registering admission
                 node.children[key] = child
                 self._node_by_page[pages[li]] = child
                 pool.share([pages[li]])
@@ -179,29 +207,34 @@ class PrefixIndex:
             li += 1
         rem = tuple(tokens[i:])
         if rem and rem not in node.partials and li < len(pages):
-            node.partials[rem] = [pages[li], now]
+            node.partials[rem] = [pages[li], now, 1]
             self._partial_by_page[pages[li]] = (node, rem)
             pool.share([pages[li]])
 
     # ----------------------------------------------------------- eviction
     def _candidates(self):
-        """(last_used, kind, node, key) for every evictable entry: partial
-        pages, and leaf full-page nodes (no children, no partials) — parents
-        become evictable bottom-up once their subtree is gone."""
+        """(score, kind, node, key) for every evictable entry — partial
+        pages, and leaf full-page nodes (no children, no partials); parents
+        become evictable bottom-up once their subtree is gone. The score is
+        the eviction key: recency under ``lru``, (frequency, recency) under
+        ``lfu``."""
         out = []
         stack = [self.root]
         while stack:
             n = stack.pop()
             stack.extend(n.children.values())
-            for content, (page, lru) in n.partials.items():
-                out.append((lru, "partial", n, content))
+            for content, (page, lru, uses) in n.partials.items():
+                score = (uses, lru) if self.policy == "lfu" else lru
+                out.append((score, "partial", n, content))
             if n is not self.root and not n.children and not n.partials:
-                out.append((n.last_used, "node", n, n.key))
+                score = (n.uses, n.last_used) if self.policy == "lfu" \
+                    else n.last_used
+                out.append((score, "node", n, n.key))
         return out
 
-    def evict_lru(self, pool: PagePool) -> bool:
-        """Drop the least-recently-used evictable entry whose page the index
-        is the SOLE owner of (refcount 1 — freeing it actually returns a
+    def evict_one(self, pool: PagePool) -> bool:
+        """Drop the policy-selected evictable entry whose page the index is
+        the SOLE owner of (refcount 1 — freeing it actually returns a
         page). Entries still referenced by live sequences are kept: evicting
         them frees nothing and only destroys future sharing value. Returns
         False when no eviction can free a page."""
@@ -212,7 +245,7 @@ class PrefixIndex:
             return False
         _, kind, node, key = min(cands, key=lambda c: c[0])
         if kind == "partial":
-            page, _ = node.partials.pop(key)
+            page = node.partials.pop(key)[0]
             self._partial_by_page.pop(page, None)
         else:
             page = node.page
@@ -221,6 +254,16 @@ class PrefixIndex:
         pool.free([page])
         self.stats.evictions += 1
         return True
+
+    def enforce_cap(self, pool: PagePool) -> None:
+        """Shed sole-owned entries until the warm cache fits ``max_pages``
+        (no-op when uncapped or when every over-cap entry is still pinned by
+        a live sequence)."""
+        if not self.max_pages:
+            return
+        while self.n_cached_pages > self.max_pages:
+            if not self.evict_one(pool):
+                break
 
     def try_release_for_write(self, page: int, pool: PagePool) -> bool:
         """A sequence is about to write into ``page`` and found refcount > 1.
@@ -250,7 +293,9 @@ class PagedKVManager:
 
     def __init__(self, n_slots: int, max_pages_per_slot: int, page_size: int,
                  kv_bytes_per_token: int = 0, offload_mode: str = "zero_copy",
-                 layout: Optional[str] = None, prefix_sharing: bool = True):
+                 layout: Optional[str] = None, prefix_sharing: bool = True,
+                 prefix_policy: str = "lru", prefix_cap_pages: int = 0,
+                 tlb_entries: int = 4096, tlb_policy: str = "lru"):
         assert offload_mode in ("zero_copy", "copy")
         if layout is None:
             layout = "global" if offload_mode == "zero_copy" else "per_slot"
@@ -276,16 +321,30 @@ class PagedKVManager:
             self.tables = np.zeros((n_slots, max_pages_per_slot), np.int32)
         # Prefix sharing needs one physical page space addressable from every
         # slot's table row — only the global layout has that.
-        self.prefix = (PrefixIndex(page_size)
+        self.prefix = (PrefixIndex(page_size, policy=prefix_policy,
+                                   max_pages=prefix_cap_pages)
                        if layout == "global" and prefix_sharing else None)
         self.pending_cow: List[Tuple[int, int]] = []   # (src, dst) page copies
-        self.space = SVASpace(PagePool(1, page_size))   # stats aggregator
-        self.tlb = TranslationCache(n_entries=4096)
+        self.sva_stats = SVAStats()      # host-side mode counters
+        # Unified translation front-end: one ASID per batch slot, a large
+        # delta-upload cache over a pure-stats walker — the same IOMMU class
+        # the simulator configures as a 4-entry hardware IOTLB + Sv39 walk.
+        self.iommu = IOMMU(walk_model=CountingWalk(),
+                           tlb=TLBConfig(tlb_entries, tlb_policy))
         self.free_slots = list(range(n_slots - 1, -1, -1))
         self.seqs: Dict[int, SeqState] = {}
         self.lengths = np.zeros((n_slots,), np.int32)
         self.dirty_rows = set(range(n_slots))
-        self.epoch = 0
+
+    @property
+    def tlb(self):
+        """The IOMMU's shared translation cache (stats / test hook)."""
+        return self.iommu.tlb
+
+    @property
+    def epoch(self) -> int:
+        """Full-flush count — owned by the IOMMU (paper Listing 1)."""
+        return self.iommu.epoch
 
     # ------------------------------------------------------------ admission
     def ensure_fits(self, prompt_len: int, max_tokens: int) -> int:
@@ -303,13 +362,14 @@ class PagedKVManager:
         return need
 
     def _alloc_evicting(self, n: int) -> List[int]:
-        """Global-pool alloc that LRU-evicts warm prefix-cache entries under
-        ``OutOfPages`` pressure before giving up."""
+        """Global-pool alloc that evicts warm prefix-cache entries (per the
+        index's lru/lfu policy) under ``OutOfPages`` pressure before giving
+        up."""
         while True:
             try:
                 return self.pool.alloc(n)
             except OutOfPages:
-                if self.prefix is None or not self.prefix.evict_lru(self.pool):
+                if self.prefix is None or not self.prefix.evict_one(self.pool):
                     raise
 
     def admit(self, seq_id: int, prompt_len: int, max_tokens: int,
@@ -371,6 +431,7 @@ class PagedKVManager:
                 self.prefix.stats.tokens_saved += prefill_start
             else:
                 self.prefix.stats.misses += 1
+            self.prefix.enforce_cap(self.pool)
         if self.layout == "global":
             row = np.full((self.max_pages,), self.null_page, np.int32)
             row[:need] = pages
@@ -387,18 +448,19 @@ class PagedKVManager:
         if self.offload_mode == "copy":
             # Staging baseline: dedicated counters (never map_* — see
             # core/sva/mapping.py stage()).
-            self.space.stats.stage_calls += 1
-            self.space.stats.bytes_copied += \
+            self.sva_stats.stage_calls += 1
+            self.sva_stats.bytes_copied += \
                 prompt_len * self.kv_bytes_per_token
         else:
             # Shared pages still cost a table-entry write (the mapping) —
             # what sharing saves is the allocation and the prefill compute.
-            self.space.stats.map_calls += 1
-            self.space.stats.table_entries_written += len(pages)
-            self.space.stats.bytes_mapped += \
+            self.sva_stats.map_calls += 1
+            self.sva_stats.table_entries_written += len(pages)
+            self.sva_stats.bytes_mapped += \
                 prompt_len * self.kv_bytes_per_token
-        for lp, pp in enumerate(pages):
-            self.tlb.fill((slot, lp), pp)
+        # PASID-style per-request address space: ASID == batch slot. map()
+        # installs the logical->physical table and warms the shared TLB.
+        self.iommu.attach(slot).map(pages)
         return st
 
     def append_token(self, seq_id: int, token: int) -> None:
@@ -428,8 +490,8 @@ class PagedKVManager:
                 j = int(np.where(row == new[0])[0][0])
                 row[lp], row[j] = row[j], row[lp]
             self.dirty_rows.add(st.slot)
-            self.space.stats.table_entries_written += 1
-            self.tlb.fill((st.slot, lp), new[0])
+            self.sva_stats.table_entries_written += 1
+            self.iommu.space(st.slot).map(new, start=lp)
         if len(st.tokens) >= st.max_tokens:
             st.done = True
         if self.layout == "global" and not st.done:
@@ -458,9 +520,8 @@ class PagedKVManager:
         self.pool.free([pg])                 # drop OUR ref; sharers keep it
         self.pool.stats.cow_copies += 1
         self.dirty_rows.add(st.slot)
-        self.space.stats.table_entries_written += 1
-        self.tlb.invalidate_key((st.slot, li))
-        self.tlb.fill((st.slot, li), dst)
+        self.sva_stats.table_entries_written += 1
+        self.iommu.space(st.slot).remap(li, dst)
 
     def drain_cow_copies(self) -> List[Tuple[int, int]]:
         """(src, dst) physical page copies the device must perform before
@@ -481,10 +542,10 @@ class PagedKVManager:
         self.lengths[st.slot] = 0
         if self.layout == "global":
             self.tables[st.slot] = self.null_page
-        self.space.stats.unmap_calls += 1
-        # self-invalidation (paper Listing 1): translations for this slot die
-        for lp in range(len(st.pages)):
-            self.tlb.invalidate_key((st.slot, lp))
+        self.sva_stats.unmap_calls += 1
+        # self-invalidation: ONLY this slot's translations die (the Listing-1
+        # full flush is invalidate_epoch)
+        self.iommu.detach(st.slot)
         self.dirty_rows.add(st.slot)
 
     # ------------------------------------------------------------ device view
@@ -498,9 +559,24 @@ class PagedKVManager:
     def invalidate_epoch(self) -> None:
         """Full translation flush (paper Listing 1): the next device upload
         must re-send every table row."""
-        self.tlb.invalidate()
-        self.epoch += 1
+        self.iommu.invalidate()              # bumps the epoch exactly once
         self.dirty_rows.update(range(self.n_slots))
+
+    def translate_step(self) -> List[Tuple[int, int, int]]:
+        """Run one decode step's page accesses through the IOMMU (ASID ==
+        slot): every live sequence gathers its resident KV pages. Returns
+        the (slot, logical_page, physical_page) access list — the serving
+        hot path's translation trace, countable live (``CountingWalk``) or
+        replayable through ``Sv39Walk`` for modeled PTW cost."""
+        out: List[Tuple[int, int, int]] = []
+        for st in self.seqs.values():
+            if st.done:
+                continue
+            n = min(-(-st.length // self.page_size), len(st.pages))
+            for lp in range(n):
+                phys, _, _ = self.iommu.translate(st.slot, lp)
+                out.append((st.slot, lp, phys))
+        return out
 
     def device_tables(self) -> np.ndarray:
         return self.tables.copy()
@@ -518,8 +594,13 @@ class PagedKVManager:
         high = sum(p.stats.high_water for p in pools)
         util = (sum(p.utilization * p.n_pages for p in pools)
                 / max(sum(p.n_pages for p in pools), 1))
-        out = {"sva": self.space.stats.as_dict(),
-               "tlb": self.tlb.stats.as_dict(),
+        io = self.iommu.stats()
+        out = {"sva": self.sva_stats.as_dict(),
+               "tlb": io["tlb"],
+               "iommu": {"walk": io["walk"], "epoch": io["epoch"],
+                         "asids": io["asids"],
+                         "tlb_entries": self.iommu.tlb_config.n_entries,
+                         "tlb_policy": self.iommu.tlb_config.policy},
                "pool_used": used,
                "pool_free": free,
                "pool_high_water": high,
@@ -528,5 +609,7 @@ class PagedKVManager:
                "cow_copies": sum(p.stats.cow_copies for p in pools)}
         if self.prefix is not None:
             out["prefix"] = {**self.prefix.stats.as_dict(),
-                             "cached_pages": self.prefix.n_cached_pages}
+                             "cached_pages": self.prefix.n_cached_pages,
+                             "policy": self.prefix.policy,
+                             "max_pages": self.prefix.max_pages}
         return out

@@ -1,13 +1,17 @@
 """Host mapping API — the driver/ioctl analogue of the paper's §III-B.
 
-``SVASpace`` owns a PagePool and hands out *mappings*: per-object block
-tables (logical page -> physical page). Two offload modes, benchmarked
-against each other exactly like the paper's Fig. 2:
+``SVASpace`` owns a PagePool and hands out *mappings*; translation is
+delegated to the unified :class:`~repro.core.sva.iommu.IOMMU` front-end —
+every mapping handle is a PASID-style ASID with its own
+:class:`~repro.core.sva.iommu.IOAddressSpace`. Two offload modes,
+benchmarked against each other exactly like the paper's Fig. 2:
 
-  zero_copy  map(): allocate pages, write table entries (24 B per 4 KiB in
-             the paper; here one int32 per page) — no data movement.
+  zero_copy  map(): allocate pages, install IOMMU translations, write table
+             entries (24 B per 4 KiB in the paper; here one int32 per page)
+             — no data movement.
   copy       stage(): model/perform the physical copy into a contiguous
-             staging region before the device can access it.
+             staging region before the device can access it (physically
+             addressed: no IOMMU mapping at all).
 
 Costs are tracked in abstract units (bytes moved, table entries written,
 map calls) so both the simulator and the TPU-level benchmarks can consume
@@ -19,7 +23,7 @@ mode's columns.
 
 TLB semantics mirror the paper's two invalidation granularities:
 ``map``/``extend`` warm per-page translations, ``unmap`` self-invalidates
-only the unmapped pages' entries (device translations for OTHER mappings
+only the unmapped ASID's entries (device translations for OTHER mappings
 stay warm), and ``invalidate_epoch`` performs the Listing-1 full flush.
 """
 from __future__ import annotations
@@ -30,8 +34,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.sva.iommu import IOMMU, CountingWalk, TLBConfig
 from repro.core.sva.page_pool import PagePool
-from repro.core.sva.tlb import TranslationCache
 
 
 @dataclass
@@ -66,14 +70,22 @@ class SVAStats:
 
 
 class SVASpace:
-    """A shared virtual address space over a page pool."""
+    """A shared virtual address space over a page pool — a thin client of
+    the unified IOMMU front-end (one ASID per mapping handle)."""
 
-    def __init__(self, pool: PagePool, tlb_entries: int = 1024):
+    def __init__(self, pool: PagePool, tlb_entries: int = 1024,
+                 tlb_policy: str = "lru"):
         self.pool = pool
-        self.tlb = TranslationCache(tlb_entries)
+        self.iommu = IOMMU(walk_model=CountingWalk(),
+                           tlb=TLBConfig(tlb_entries, tlb_policy))
         self.stats = SVAStats()
         self._next = 1
         self._maps: Dict[int, Mapping] = {}
+
+    @property
+    def tlb(self):
+        """The IOMMU's shared translation cache (stats / test hook)."""
+        return self.iommu.tlb
 
     # ------------------------------------------------------------- internal
     def _allocate(self, n_bytes: int,
@@ -104,8 +116,7 @@ class SVASpace:
         self.stats.map_calls += 1
         self.stats.table_entries_written += len(m.pages)
         self.stats.bytes_mapped += n_bytes
-        for lp, pp in enumerate(m.pages):
-            self.tlb.fill((m.handle, lp), pp)
+        self.iommu.attach(m.handle).map(m.pages)
         self.stats.host_seconds += time.perf_counter() - t0
         return m
 
@@ -118,8 +129,9 @@ class SVASpace:
         t0 = time.perf_counter()
         fresh = self.pool.alloc(n_new_pages)
         grown_bytes = n_new_pages * self.pool.page_size
-        for lp, pp in enumerate(fresh, start=len(m.pages)):
-            self.tlb.fill((m.handle, lp), pp)
+        sp = self.iommu.space(m.handle)
+        if sp is not None:
+            sp.extend(fresh)
         m.pages.extend(fresh)
         m.n_bytes += grown_bytes
         self.stats.bytes_mapped += grown_bytes
@@ -132,25 +144,34 @@ class SVASpace:
 
         A whole-TLB (epoch) flush per unmap would force a full re-walk /
         full-table re-upload for every OTHER live mapping each time one
-        request completes; per-key invalidation keeps their translations
+        request completes; per-ASID invalidation keeps their translations
         warm. The Listing-1 full flush is ``invalidate_epoch()``."""
         t0 = time.perf_counter()
         self.pool.free(m.pages)
         self._maps.pop(m.handle, None)
         self.stats.unmap_calls += 1
-        for lp in range(len(m.pages)):
-            self.tlb.invalidate_key((m.handle, lp))
+        self.iommu.detach(m.handle)
         self.stats.host_seconds += time.perf_counter() - t0
+
+    def translate(self, m: Mapping, logical_page: int):
+        """Device-side translation through the shared IOTLB: returns
+        (physical page, walk cost, hit)."""
+        sp = self.iommu.space(m.handle)
+        if sp is None:
+            raise KeyError(f"mapping {m.handle} has no IOMMU address space "
+                           "(staged mappings are physically addressed)")
+        return sp.translate(logical_page)
 
     def invalidate_epoch(self) -> None:
         """Full translation flush (paper Listing 1)."""
-        self.tlb.invalidate()
+        self.iommu.invalidate()
 
     # ----------------------------------------------------------- copy mode
     def stage(self, n_bytes: int, do_copy=None) -> Mapping:
         """Copy-based baseline: contiguous staging (models the reserved
-        physically-addressed DRAM region). ``do_copy(n_bytes)`` performs the
-        actual data movement when the caller has real buffers.
+        physically-addressed DRAM region — no IOMMU mapping is created).
+        ``do_copy(n_bytes)`` performs the actual data movement when the
+        caller has real buffers.
 
         Tracked in DEDICATED counters (``stage_calls`` / ``bytes_copied``):
         it no longer routes through ``map()``, so copy-mode admissions never
@@ -165,3 +186,9 @@ class SVASpace:
         self.stats.bytes_copied += n_bytes    # pays the copy, not the map
         self.stats.host_seconds += time.perf_counter() - t0
         return m
+
+    # --------------------------------------------------------------- stats
+    def stats_dict(self) -> dict:
+        """Unified stats schema: host-side counters + the IOMMU's
+        translation sections (see ARCHITECTURE.md)."""
+        return {"sva": self.stats.as_dict(), **self.iommu.stats()}

@@ -1,18 +1,28 @@
-"""Translation cache — the IOTLB analogue, with epoch self-invalidation.
+"""Translation cache — the IOTLB analogue, with pluggable replacement.
 
-Two users:
-  * the performance simulator models the paper's 4-entry hardware IOTLB and
-    counts PTW walks (3 sequential accesses on miss, RISC-V Sv39);
-  * the serving engine uses a larger cache to decide which block-table rows
-    actually changed since the last device upload (delta uploads) and when a
-    full re-upload is required (epoch invalidation — paper Listing 1:
-    flush + remap before offload).
+This class is a *component* of the unified IOMMU front-end
+(:mod:`repro.core.sva.iommu`): the paper's 4-entry hardware IOTLB and the
+serving engine's large delta-upload cache are the same class configured
+differently (``TLBConfig(n_entries, policy)``).  No module outside
+``iommu.py`` constructs it directly — attach an address space to an
+:class:`~repro.core.sva.iommu.IOMMU` instead.
+
+Replacement policies (the Kim-et-al. translation design space):
+
+  lru     hit refreshes recency; evict the least recently used entry
+  fifo    insertion order only; hits never reorder
+  lfu     evict the least frequently used entry (ties: oldest insertion)
+  random  evict a uniformly random entry (seeded — traces stay reproducible)
 """
 from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Hashable, Optional, Tuple
+from typing import Hashable, Iterable, Optional, Tuple
+
+import numpy as np
+
+POLICIES = ("lru", "fifo", "lfu", "random")
 
 
 @dataclass
@@ -21,7 +31,7 @@ class TLBStats:
     misses: int = 0
     evictions: int = 0
     invalidations: int = 0
-    walks: int = 0           # page-table walks performed (one per miss)
+    walks: int = 0           # page-table walks performed (one per genuine miss)
 
     @property
     def hit_rate(self) -> float:
@@ -35,53 +45,80 @@ class TLBStats:
 
 
 class TranslationCache:
-    """LRU (key -> value) cache with epoch invalidation."""
+    """(key -> value) cache with epoch invalidation and pluggable policy."""
 
-    def __init__(self, n_entries: int):
+    def __init__(self, n_entries: int, policy: str = "lru", seed: int = 0):
         assert n_entries >= 1
+        if policy not in POLICIES:
+            raise ValueError(f"policy={policy!r} (expected one of {POLICIES})")
         self.n_entries = n_entries
+        self.policy = policy
         self._map: OrderedDict = OrderedDict()
-        self.epoch = 0
+        self._freq: dict = {}
+        self._rng = np.random.default_rng(seed)
         self.stats = TLBStats()
 
     def lookup(self, key: Hashable) -> Tuple[Optional[int], bool]:
         """Returns (value, hit)."""
         if key in self._map:
-            self._map.move_to_end(key)
+            if self.policy == "lru":
+                self._map.move_to_end(key)
+            elif self.policy == "lfu":
+                self._freq[key] += 1
             self.stats.hits += 1
             return self._map[key], True
         self.stats.misses += 1
         return None, False
 
-    def fill(self, key: Hashable, value) -> None:
-        """Insert after a walk (miss path)."""
-        self.stats.walks += 1
+    def _evict_one(self) -> None:
+        if self.policy in ("lru", "fifo"):
+            victim = next(iter(self._map))
+        elif self.policy == "lfu":
+            # min frequency; ties broken by insertion order (OrderedDict scan)
+            victim = min(self._map, key=lambda k: self._freq[k])
+        else:                                     # random (seeded)
+            keys = list(self._map)
+            victim = keys[int(self._rng.integers(len(keys)))]
+        del self._map[victim]
+        self._freq.pop(victim, None)
+        self.stats.evictions += 1
+
+    def fill(self, key: Hashable, value, walked: bool = True) -> None:
+        """Insert a translation. A walk is counted ONLY for a genuine
+        walk-and-fill (``walked=True`` AND the key not already resident):
+        refreshing a live entry (e.g. re-warming on ``extend``) or a host
+        pre-warm at map time (``walked=False`` — the driver wrote the PTE,
+        no device walk happened) must not inflate Fig.5-style walk
+        counts."""
         if key in self._map:
-            self._map.move_to_end(key)
+            if self.policy == "lru":
+                self._map.move_to_end(key)
             self._map[key] = value
             return
+        if walked:
+            self.stats.walks += 1
         if len(self._map) >= self.n_entries:
-            self._map.popitem(last=False)
-            self.stats.evictions += 1
+            self._evict_one()
         self._map[key] = value
-
-    def translate(self, key: Hashable, walk_fn) -> Tuple[int, bool]:
-        """lookup + walk-and-fill on miss. Returns (value, hit)."""
-        val, hit = self.lookup(key)
-        if hit:
-            return val, True
-        val = walk_fn(key)
-        self.fill(key, val)
-        return val, False
+        self._freq[key] = 1
 
     def invalidate(self) -> None:
-        """Epoch invalidation: drop everything (paper's self-invalidation)."""
+        """Full invalidation: drop everything (paper's self-invalidation).
+        The epoch counter lives on the owning IOMMU — the single owner of
+        full-flush state."""
         self._map.clear()
-        self.epoch += 1
+        self._freq.clear()
         self.stats.invalidations += 1
 
     def invalidate_key(self, key: Hashable) -> None:
         self._map.pop(key, None)
+        self._freq.pop(key, None)
+
+    def keys(self) -> Iterable[Hashable]:
+        return list(self._map.keys())
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._map
 
     def __len__(self) -> int:
         return len(self._map)

@@ -29,6 +29,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-tokens", type=int, default=12)
     ap.add_argument("--offload-mode", default="zero_copy",
                     choices=["zero_copy", "copy"])
+    ap.add_argument("--translation-stats", action="store_true",
+                    help="run decode-step page gathers through the IOMMU "
+                         "for live IOTLB hit/miss stats (host-side sweep: "
+                         "adds per-step overhead, off by default)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -38,7 +42,8 @@ def main(argv=None) -> int:
     params = init_params(cfg, jax.random.key(args.seed))
     eng = ServingEngine(cfg, params, n_slots=args.slots, max_len=args.max_len,
                         page_size=args.page_size,
-                        offload_mode=args.offload_mode)
+                        offload_mode=args.offload_mode,
+                        translation_stats=args.translation_stats)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     rids = [eng.submit(rng.integers(0, cfg.vocab_size,
@@ -57,7 +62,7 @@ def main(argv=None) -> int:
           f"mode={args.offload_mode}")
     print(json.dumps({k: v for k, v in s.items()
                       if k in ("prefills", "decode_steps", "staging_copies",
-                               "sva", "tlb")}, indent=1))
+                               "sva", "tlb", "iommu")}, indent=1))
     return 0
 
 

@@ -10,8 +10,8 @@ import numpy as np
 from hypothesis import given, settings
 
 from repro.core.simulator.run import simulate_kernel
+from repro.core.sva.iommu import IOMMU, CountingWalk, TLBConfig
 from repro.core.sva.page_pool import OutOfPages, PagePool
-from repro.core.sva.tlb import TranslationCache
 from repro.kernels.mergesort.ops import mergesort
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
@@ -109,23 +109,30 @@ def test_kv_manager_cow_interleaving_invariants(ops, n_prompts):
 
 @settings(**SETTINGS)
 @given(st.lists(st.integers(0, 30), min_size=1, max_size=200),
-       st.integers(1, 8))
-def test_tlb_lru(refs, entries):
-    """The LRU cache never exceeds capacity and hit => previously filled."""
-    tlb = TranslationCache(entries)
-    filled = set()
+       st.integers(1, 8),
+       st.sampled_from(["lru", "fifo", "lfu", "random"]))
+def test_tlb_policies(refs, entries, policy):
+    """ANY replacement policy through the IOMMU front-end: capacity is
+    never exceeded, a hit implies a previous walk, translations are always
+    correct, every genuine miss walks exactly once, and a full invalidation
+    empties the cache and bumps the epoch exactly once."""
+    iommu = IOMMU(walk_model=CountingWalk(),
+                  tlb=TLBConfig(entries, policy, seed=1))
+    sp = iommu.attach(0)
+    sp.map([r * 7 for r in range(31)], warm=False)     # table only, cold TLB
+    walked = set()
     for r in refs:
-        val, hit = tlb.lookup(r)
+        val, cost, hit = sp.translate(r)
+        assert val == r * 7
         if hit:
-            assert r in filled
-            assert val == r * 7
-        else:
-            tlb.fill(r, r * 7)
-            filled.add(r)
-        assert len(tlb) <= entries
-    tlb.invalidate()
-    assert len(tlb) == 0
-    assert tlb.lookup(refs[0])[1] is False
+            assert r in walked
+        walked.add(r)
+        assert len(iommu.tlb) <= entries
+    assert iommu.tlb.stats.walks == iommu.tlb.stats.misses
+    assert iommu.walk_model.stats.walks == iommu.tlb.stats.walks
+    iommu.invalidate()
+    assert len(iommu.tlb) == 0 and iommu.epoch == 1
+    assert sp.translate(refs[0])[2] is False
 
 
 @settings(**SETTINGS)

@@ -390,6 +390,68 @@ def test_engine_pallas_decode_backend_matches_jax(key):
     assert run("pallas") == run("jax")
 
 
+def _prefix_policy_scenario(policy):
+    """Hot 2-page prompt (matched twice, high frequency) vs a colder 2-page
+    one-shot prompt, both RELEASED, competing under a 4-page warm-cache
+    cap; a later 1-page admission overflows the cap by one and forces the
+    policy to pick a victim. Returns the hot prompt's shared pages on
+    re-admission."""
+    mgr = PagedKVManager(n_slots=2, max_pages_per_slot=8, page_size=4,
+                         prefix_policy=policy, prefix_cap_pages=4)
+    hot = list(range(8))                         # exactly 2 full pages
+    mgr.admit(0, 8, 8, tokens=hot)
+    mgr.release(0)
+    mgr.admit(1, 8, 8, tokens=hot)               # match bumps frequency
+    mgr.release(1)
+    mgr.admit(2, 8, 8, tokens=list(range(100, 108)))   # cold, 2 pages
+    mgr.release(2)                               # cached: hot 2 + cold 2
+    mgr.admit(3, 4, 4, tokens=list(range(200, 204)))   # +1 page > cap
+    mgr.release(3)
+    probe = mgr.admit(4, 8, 8, tokens=hot)
+    mgr.pool.check_invariants()
+    return probe.shared_pages, mgr
+
+
+def test_prefix_cache_policy_lfu_keeps_hot_prompt():
+    """Under a capped warm cache, LFU retains the frequently re-admitted
+    prompt intact while LRU (recency) sheds its tail in favor of the newer
+    one-shot prompt — the ROADMAP's frequency-aware eviction ask."""
+    shared_lfu, mgr_lfu = _prefix_policy_scenario("lfu")
+    shared_lru, _ = _prefix_policy_scenario("lru")
+    assert shared_lfu == 2                       # hot prefix fully resident
+    assert shared_lru < shared_lfu               # recency evicted its tail
+    assert mgr_lfu.prefix.stats.evictions > 0
+    assert mgr_lfu.stats()["prefix"]["policy"] == "lfu"
+
+
+def test_prefix_cache_cap_enforced():
+    """prefix_cache_pages bounds the warm cache's sole-owned footprint:
+    after release, the next admission sheds entries down to the cap."""
+    mgr = PagedKVManager(n_slots=2, max_pages_per_slot=8, page_size=4,
+                         prefix_cap_pages=2)
+    mgr.admit(0, 16, 4, tokens=list(range(300, 316)))    # 4 full pages
+    mgr.release(0)
+    assert mgr.prefix.n_cached_pages == 4        # live cap waits for release
+    mgr.admit(1, 4, 4, tokens=list(range(400, 404)))
+    assert mgr.prefix.n_cached_pages <= 2
+    assert mgr.prefix.stats.evictions >= 2
+    mgr.pool.check_invariants()
+
+
+def test_engine_wires_prefix_policy_from_config(key):
+    import dataclasses
+    cfg = dataclasses.replace(reduce_for_smoke(get_config("llama3.2-1b")),
+                              prefix_cache_policy="lfu",
+                              prefix_cache_pages=8)
+    params = init_params(cfg, key)
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=64, page_size=8)
+    assert eng.mgr.prefix.policy == "lfu"
+    assert eng.mgr.prefix.max_pages == 8
+    s = eng.stats()
+    assert s["prefix"]["policy"] == "lfu" and s["prefix"]["max_pages"] == 8
+    assert s["iommu"]["walk"]["model"] == "counting"
+
+
 def test_map_tables_rejects_wraparound():
     """Regression: installing a table row into a leaf with fewer pages
     (sliding-window) must raise, not wrap entries modulo the pool size."""
