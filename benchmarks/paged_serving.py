@@ -26,17 +26,23 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import sys
 import time
+from pathlib import Path
 from typing import List
 
 import jax
 import numpy as np
 
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.trace_replay import replay_trace
 from repro.configs import get_config, reduce_for_smoke
 from repro.configs.paper_soc import PaperSoCConfig
 from repro.core.serving.engine import ServingEngine
 from repro.core.simulator.platform import H2A
-from repro.core.sva.iommu import IOMMU, CountingWalk, Sv39Walk, TLBConfig
+from repro.core.sva.iommu import (IOMMU, CountingWalk, Sv39Walk, TLBConfig,
+                                  WalkCacheConfig)
 from repro.models import init_params
 
 
@@ -203,33 +209,11 @@ def run(dry_run: bool = False) -> List[str]:
 def _replay(trace, walk_model, tlb: TLBConfig, kv_bytes_per_token: int,
             compute_per_token: float, soc: PaperSoCConfig, dram_latency: int):
     """Feed a recorded serving translation trace through an IOMMU design
-    point. Returns (iommu, per-step list of (ptw_cycles, step_cycles)) in
-    accelerator cycles."""
+    point (the shared ``trace_replay`` cost model). Returns (iommu,
+    per-step list of (ptw_cycles, step_cycles)) in accelerator cycles."""
     iommu = IOMMU(walk_model=walk_model, tlb=tlb)
-    burst = (dram_latency + soc.dram_base_latency) * H2A
-    per_step = []
-    for ev in trace:
-        if ev[0] == "map":
-            iommu.host_map_pass(ev[1])
-        elif ev[0] == "unmap":
-            _, slot, n_pages = ev
-            iommu.invalidate(pages=[(slot, lp) for lp in range(n_pages)])
-        else:
-            _, accesses, tokens = ev
-            ptw = 0.0
-            for slot, lp, phys in accesses:
-                # translate() re-walks stale hits itself (the recorded phys
-                # is ground truth after a CoW remap)
-                _, cost, _ = iommu.translate(slot, lp, phys=phys)
-                ptw += cost
-            kv_bytes = tokens * kv_bytes_per_token
-            dma = len(accesses) * burst \
-                + kv_bytes / soc.dram_bytes_per_cycle * H2A
-            compute = tokens * compute_per_token
-            # Double-buffered gather hides compute under DMA (or vice
-            # versa); walks serialize in front of their page's burst.
-            per_step.append((ptw, max(compute, dma) + ptw))
-    return iommu, per_step
+    return iommu, replay_trace(trace, iommu, kv_bytes_per_token,
+                               compute_per_token, soc, dram_latency)
 
 
 def run_translation_report(dry_run: bool = False,
@@ -262,8 +246,9 @@ def run_translation_report(dry_run: bool = False,
                 f"serving IOMMU (4096-entry CountingWalk) on live traffic: "
                 f"hits={live['hits']} walks={live['walks']}")
 
-    def replay(model_factory, tlb_entries):
-        return _replay(trace, model_factory(), TLBConfig(tlb_entries, "lru"),
+    def replay(model_factory, tlb_entries, ways=0):
+        return _replay(trace, model_factory(),
+                       TLBConfig(tlb_entries, "lru", ways=ways),
                        kv_tok, compute_per_token, soc, dram_latency)
 
     counting, _ = replay(CountingWalk, soc.iotlb_entries)
@@ -271,6 +256,16 @@ def run_translation_report(dry_run: bool = False,
     rows.append(f"translation.iotlb_hit_rate,{cstats['hit_rate']},"
                 f"paper's {soc.iotlb_entries}-entry IOTLB replaying the "
                 f"same trace: walks={cstats['walks']} (CountingWalk)")
+    # Set-associative geometry on the same trace (Kim et al. axis 2): a
+    # constrained 4-entry IOTLB trades hits for conflict misses.
+    for ways in (1, 2):
+        sa, _ = replay(CountingWalk, soc.iotlb_entries, ways=ways)
+        ss = sa.stats()["tlb"]
+        rows.append(f"translation.iotlb_hit_rate.ways{ways},"
+                    f"{ss['hit_rate']},{ways}-way {soc.iotlb_entries}-entry "
+                    f"IOTLB: walks={ss['walks']} "
+                    f"conflict_misses={ss['conflict_misses']} "
+                    f"(fully assoc: {cstats['hit_rate']})")
 
     mk_off = lambda: Sv39Walk(levels=soc.ptw_levels,
                               dram_access_cycles=dram_latency
@@ -312,6 +307,21 @@ def run_translation_report(dry_run: bool = False,
     rows.append(f"translation.ptw_pct.llc_off.tlb4096.mean,"
                 f"{np.mean(big):.2f},same trace, serving-sized TLB: "
                 "cold-miss walks only (design-space axis: IOTLB size)")
+    # Walk-cache axis: a 16-entry non-leaf PTE cache on the walker cuts
+    # every miss from 3 sequential DRAM accesses to ~1 without any LLC.
+    mk_wc = lambda: Sv39Walk(levels=soc.ptw_levels,
+                             dram_access_cycles=dram_latency
+                             + soc.dram_base_latency,
+                             llc=False, to_accel=H2A,
+                             walk_cache=WalkCacheConfig(16))
+    wc_iommu, wc_steps = replay(mk_wc, soc.iotlb_entries)
+    wcp = [pct(p, t) for p, t in wc_steps]
+    wc_stats = wc_iommu.stats()["walk"]["walk_cache"]
+    rows.append(f"translation.ptw_pct.llc_off.walkcache16.mean,"
+                f"{np.mean(wcp):.2f},same 4-entry IOTLB + 16-entry walk "
+                f"cache, no LLC (off: {np.mean(off_pcts):.1f}%; "
+                f"wc hits={wc_stats['hits']} misses={wc_stats['misses']}) "
+                "— full grid: benchmarks/tlb_sweep.py")
     return rows
 
 

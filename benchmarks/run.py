@@ -14,7 +14,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: table2,fig2,fig3,fig5,serving,roofline")
+                    help="comma list: table2,fig2,fig3,fig5,serving,sweep,"
+                         "roofline")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -35,6 +36,11 @@ def main() -> None:
         from benchmarks import paged_serving
         sections.append(("Paged serving (TPU Fig.2 analogue)",
                          paged_serving.run))
+    if want is None or "sweep" in want:
+        from benchmarks import tlb_sweep
+        # smoke grid inside the driver; the full grid is the standalone CLI
+        sections.append(("TLB/walk-cache design-space sweep (smoke)",
+                         lambda: tlb_sweep.run(smoke=True)))
     if want is None or "roofline" in want:
         from benchmarks import roofline
         sections.append(("Roofline (dry-run artifacts)", roofline.run))

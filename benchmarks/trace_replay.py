@@ -1,0 +1,51 @@
+"""Shared replay of a recorded serving translation trace through an IOMMU
+design point — the ONE cost model behind both
+``paged_serving.py --translation-report`` and ``tlb_sweep.py`` (so the
+two always report comparable PTW percentages). jax-free: replay prices
+recorded events, it never runs the model.
+
+Trace events (recorded by ``ServingEngine(record_translation_trace=True)``):
+
+  ("map",   pages)              Listing-1 host map pass (warms PTE lines)
+  ("step",  accesses, tokens)   one decode step's (slot, lp, phys) gathers
+  ("unmap", slot, n_pages)      release: per-page self-invalidation
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.configs.paper_soc import PaperSoCConfig
+from repro.core.simulator.platform import H2A
+from repro.core.sva.iommu import IOMMU
+
+
+def replay_trace(trace, iommu: IOMMU, kv_bytes_per_token: int,
+                 compute_per_token: float, soc: PaperSoCConfig,
+                 dram_latency: int) -> List[Tuple[float, float]]:
+    """Feed a recorded serving translation trace through ``iommu``.
+    Returns the per-decode-step list of (ptw_cycles, step_cycles) in
+    accelerator cycles."""
+    burst = (dram_latency + soc.dram_base_latency) * H2A
+    per_step: List[Tuple[float, float]] = []
+    for ev in trace:
+        if ev[0] == "map":
+            iommu.host_map_pass(ev[1])
+        elif ev[0] == "unmap":
+            _, slot, n_pages = ev
+            iommu.invalidate(pages=[(slot, lp) for lp in range(n_pages)])
+        else:
+            _, accesses, tokens = ev
+            ptw = 0.0
+            for slot, lp, phys in accesses:
+                # translate() re-walks stale hits itself (the recorded phys
+                # is ground truth after a CoW remap)
+                _, cost, _ = iommu.translate(slot, lp, phys=phys)
+                ptw += cost
+            kv_bytes = tokens * kv_bytes_per_token
+            dma = len(accesses) * burst \
+                + kv_bytes / soc.dram_bytes_per_cycle * H2A
+            compute = tokens * compute_per_token
+            # Double-buffered gather hides compute under DMA (or vice
+            # versa); walks serialize in front of their page's burst.
+            per_step.append((ptw, max(compute, dma) + ptw))
+    return per_step

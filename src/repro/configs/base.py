@@ -103,6 +103,13 @@ class ModelConfig:
     # retain after release (0 = bounded only by pool pressure).
     prefix_cache_policy: str = "lru"        # lru | lfu
     prefix_cache_pages: int = 0
+    # Serving-side translation front-end geometry: the delta-upload cache
+    # the PagedKVManager runs decode page gathers through (same
+    # TranslationCache as the simulator's hardware IOTLB; tuned per
+    # deployment via benchmarks/tlb_sweep.py).
+    serve_tlb_entries: int = 4096
+    serve_tlb_ways: int = 0                 # 0 = fully associative
+    serve_tlb_policy: str = "lru"           # lru | fifo | lfu | random
 
     def __post_init__(self):
         if self.d_head == 0:
@@ -119,6 +126,21 @@ class ModelConfig:
             raise ValueError(
                 f"{self.name}: prefix_cache_pages={self.prefix_cache_pages} "
                 "(must be >= 0; 0 = uncapped)")
+        if self.serve_tlb_policy not in ("lru", "fifo", "lfu", "random"):
+            raise ValueError(
+                f"{self.name}: serve_tlb_policy={self.serve_tlb_policy!r} "
+                "(expected lru | fifo | lfu | random)")
+        if self.serve_tlb_entries < 1:
+            raise ValueError(
+                f"{self.name}: serve_tlb_entries={self.serve_tlb_entries} "
+                "(need >= 1)")
+        ways = self.serve_tlb_ways
+        if ways < 0 or ways > self.serve_tlb_entries or \
+                (ways and self.serve_tlb_entries % ways):
+            raise ValueError(
+                f"{self.name}: serve_tlb_ways={ways} must divide "
+                f"serve_tlb_entries={self.serve_tlb_entries} "
+                "(0 = fully associative)")
         blk = len(self.block_pattern)
         body = self.n_layers - self.first_k_dense
         if body % blk != 0:

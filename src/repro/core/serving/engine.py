@@ -247,7 +247,10 @@ class ServingEngine:
                                   offload_mode=offload_mode,
                                   prefix_sharing=self._can_share,
                                   prefix_policy=cfg.prefix_cache_policy,
-                                  prefix_cap_pages=cfg.prefix_cache_pages)
+                                  prefix_cap_pages=cfg.prefix_cache_pages,
+                                  tlb_entries=cfg.serve_tlb_entries,
+                                  tlb_policy=cfg.serve_tlb_policy,
+                                  tlb_ways=cfg.serve_tlb_ways)
         # Translation trace: ("map", fresh_pages) at admission (Listing-1
         # host map pass) and ("step", accesses, tokens_read) per decode step
         # — replayable through any IOMMU walk model (see

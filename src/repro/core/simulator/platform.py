@@ -27,7 +27,7 @@ from typing import Iterable, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.paper_soc import PaperSoCConfig
-from repro.core.sva.iommu import IOMMU, Sv39Walk, TLBConfig
+from repro.core.sva.iommu import IOMMU, Sv39Walk, TLBConfig, WalkCacheConfig
 
 H2A = 20.0 / 50.0     # host-domain cycles -> accelerator cycles
 
@@ -43,6 +43,10 @@ class SimConfig:
     pte_evict_prob: float = 0.10      # baseline leaf-PTE eviction (128 KiB LLC
                                       # shared with OS data between map & use)
     iotlb_policy: str = "lru"         # IOTLB replacement (design-space axis)
+    iotlb_ways: int = 0               # IOTLB associativity (0 = fully assoc)
+    walk_cache_entries: int = 0       # non-leaf PTE walk cache (0 = off)
+    walk_cache_ways: int = 0          # walk-cache associativity (0 = fully)
+    walk_cache_policy: str = "lru"    # walk-cache replacement
     seed: int = 0
 
 
@@ -98,9 +102,13 @@ class MemorySystem:
                 pte_evict_prob=cfg.pte_evict_prob,
                 host_interference=cfg.host_interference,
                 to_accel=H2A,
-                seed=cfg.seed),
+                seed=cfg.seed,
+                walk_cache=WalkCacheConfig(cfg.walk_cache_entries,
+                                           cfg.walk_cache_ways,
+                                           cfg.walk_cache_policy,
+                                           seed=cfg.seed)),
             tlb=TLBConfig(self.soc.iotlb_entries, cfg.iotlb_policy,
-                          seed=cfg.seed))
+                          seed=cfg.seed, ways=cfg.iotlb_ways))
 
     @property
     def iotlb(self):

@@ -17,23 +17,33 @@ CONFIGS = ("baseline", "iommu", "iommu_llc")
 def make_sim_config(config: str, dram_latency: int,
                     soc: Optional[PaperSoCConfig] = None,
                     host_interference: float = 0.0,
-                    iotlb_policy: str = "lru") -> SimConfig:
+                    iotlb_policy: str = "lru", iotlb_ways: int = 0,
+                    walk_cache_entries: int = 0, walk_cache_ways: int = 0,
+                    walk_cache_policy: str = "lru") -> SimConfig:
     soc = soc or PaperSoCConfig()
     return SimConfig(soc=soc, dram_latency=dram_latency,
                      iommu=config in ("iommu", "iommu_llc"),
                      llc=config == "iommu_llc",
                      host_interference=host_interference,
-                     iotlb_policy=iotlb_policy)
+                     iotlb_policy=iotlb_policy, iotlb_ways=iotlb_ways,
+                     walk_cache_entries=walk_cache_entries,
+                     walk_cache_ways=walk_cache_ways,
+                     walk_cache_policy=walk_cache_policy)
 
 
 def simulate_kernel(kernel: str, config: str, dram_latency: int,
                     params: Optional[KernelParams] = None,
                     host_interference: float = 0.0,
-                    iotlb_policy: str = "lru") -> KernelResult:
+                    iotlb_policy: str = "lru", iotlb_ways: int = 0,
+                    walk_cache_entries: int = 0, walk_cache_ways: int = 0,
+                    walk_cache_policy: str = "lru") -> KernelResult:
     tiles = schedule(kernel, params)
     cfg = make_sim_config(config, dram_latency,
                           host_interference=host_interference,
-                          iotlb_policy=iotlb_policy)
+                          iotlb_policy=iotlb_policy, iotlb_ways=iotlb_ways,
+                          walk_cache_entries=walk_cache_entries,
+                          walk_cache_ways=walk_cache_ways,
+                          walk_cache_policy=walk_cache_policy)
     return run_kernel(tiles, cfg)
 
 

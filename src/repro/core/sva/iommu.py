@@ -18,11 +18,15 @@ implementation; everything else is a client:
     configured differently.
 
 Design-space axes (Kim et al., "Address Translation Design Tradeoffs for
-Heterogeneous Systems"): TLB size and replacement policy
-(``TLBConfig(n_entries, policy)`` — lru | fifo | lfu | random) and walker
-cost model (``WalkModel``) are independently pluggable, so the same traffic
-can be priced as pure stats (``CountingWalk``) or as modeled Sv39 cycles
-with/without the shared LLC (``Sv39Walk``).
+Heterogeneous Systems"): TLB size, set associativity, and replacement
+policy (``TLBConfig(n_entries, policy, ways=...)`` — lru | fifo | lfu |
+random, ways=0 fully associative), walker cost model (``WalkModel``), and
+the walker's non-leaf PTE walk cache (``WalkCacheConfig``) are
+independently pluggable, so the same traffic can be priced as pure stats
+(``CountingWalk``) or as modeled Sv39 cycles with/without the shared LLC
+and with/without a hardware walk cache (``Sv39Walk``).
+``benchmarks/tlb_sweep.py`` sweeps these axes over recorded serving
+traces.
 
 No module outside this one constructs a raw
 :class:`~repro.core.sva.tlb.TranslationCache`.
@@ -40,10 +44,17 @@ from repro.core.sva.tlb import POLICIES, TLBStats, TranslationCache
 
 @dataclass(frozen=True)
 class TLBConfig:
-    """IOTLB geometry + replacement policy (the translation design space)."""
+    """IOTLB geometry + replacement policy (the translation design space).
+
+    ``ways`` is the set associativity: 0 (or ``n_entries``) is fully
+    associative — one set, bit-identical to the historical behavior; any
+    proper divisor of ``n_entries`` splits the cache into
+    ``n_entries // ways`` sets indexed on the logical page, with per-set
+    replacement state and conflict-miss accounting."""
     n_entries: int = 4096
     policy: str = "lru"           # lru | fifo | lfu | random
     seed: int = 0                 # random-policy determinism (trace parity)
+    ways: int = 0                 # 0 = fully associative (== n_entries)
 
     def __post_init__(self):
         if self.n_entries < 1:
@@ -51,6 +62,45 @@ class TLBConfig:
         if self.policy not in POLICIES:
             raise ValueError(
                 f"policy={self.policy!r} (expected one of {POLICIES})")
+        ways = self.ways or self.n_entries
+        if ways < 1 or ways > self.n_entries or self.n_entries % ways:
+            raise ValueError(
+                f"ways={self.ways} must divide n_entries={self.n_entries} "
+                f"(1 <= ways <= n_entries; 0 = fully associative)")
+
+    @property
+    def resolved_ways(self) -> int:
+        return self.ways or self.n_entries
+
+    @property
+    def n_sets(self) -> int:
+        return self.n_entries // self.resolved_ways
+
+
+@dataclass(frozen=True)
+class WalkCacheConfig:
+    """Geometry of the walker's page-table-walk cache: a small on-IOMMU
+    cache of NON-LEAF PTE lines (hardware MMU walk caches), so a hit skips
+    the upper-level accesses of a walk. ``n_entries == 0`` disables it —
+    the default, bit-identical to the historical 3-sequential-access
+    walker."""
+    n_entries: int = 0            # 0 = walk cache disabled
+    ways: int = 0                 # 0 = fully associative
+    policy: str = "lru"           # lru | fifo | lfu | random
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.n_entries < 0:
+            raise ValueError(f"n_entries={self.n_entries} (need >= 0)")
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"policy={self.policy!r} (expected one of {POLICIES})")
+        if self.n_entries:
+            ways = self.ways or self.n_entries
+            if ways < 1 or ways > self.n_entries or self.n_entries % ways:
+                raise ValueError(
+                    f"ways={self.ways} must divide n_entries="
+                    f"{self.n_entries} (0 = fully associative)")
 
 
 @dataclass
@@ -70,8 +120,12 @@ class WalkModel(Protocol):
     name: str
     stats: WalkStats
 
-    def walk(self, asid: int, page: int) -> float:
-        """Cost of a full walk for ``page`` (physical id). Returns cycles."""
+    def walk(self, asid: int, page: int,
+             vpn: Optional[int] = None) -> float:
+        """Cost of a full walk for ``page`` (physical id). ``vpn`` is the
+        VIRTUAL (logical) page the walk resolves — walk caches tag on it,
+        like hardware; defaults to ``page`` for identity-translating
+        callers. Returns cycles."""
         ...
 
     def host_map_pass(self, pages: Iterable[int]) -> None:
@@ -89,7 +143,8 @@ class CountingWalk:
     def __init__(self):
         self.stats = WalkStats()
 
-    def walk(self, asid: int, page: int) -> float:
+    def walk(self, asid: int, page: int,
+             vpn: Optional[int] = None) -> float:
         self.stats.walks += 1
         return 0.0
 
@@ -115,7 +170,8 @@ class Sv39Walk:
     def __init__(self, levels: int = 3, dram_access_cycles: float = 235.0,
                  llc: bool = False, llc_hit_cycles: float = 10.0,
                  pte_evict_prob: float = 0.10, host_interference: float = 0.0,
-                 to_accel: float = 1.0, seed: int = 0):
+                 to_accel: float = 1.0, seed: int = 0,
+                 walk_cache: Optional[WalkCacheConfig] = None):
         self.levels = levels
         self.dram_access_cycles = dram_access_cycles
         self.llc = llc
@@ -126,27 +182,70 @@ class Sv39Walk:
         self.llc_resident: set = set()      # PTE line ids resident in LLC
         self._rng = np.random.default_rng(seed)
         self.stats = WalkStats()
+        # Optional hardware walk cache over NON-LEAF PTEs: a hit at depth d
+        # skips the accesses of levels 0..d (they resolve from on-IOMMU
+        # SRAM). Disabled (None) reproduces the plain sequential walker.
+        self.walk_cache_config = walk_cache
+        self.walk_cache: Optional[TranslationCache] = None
+        if walk_cache is not None and walk_cache.n_entries:
+            self.walk_cache = TranslationCache(
+                walk_cache.n_entries, policy=walk_cache.policy,
+                seed=walk_cache.seed, ways=walk_cache.ways)
 
     def host_map_pass(self, pages: Iterable[int]) -> None:
         if self.llc:
             for p in set(pages):
                 self.llc_resident.add(p // 8)
 
-    def walk(self, asid: int, page: int) -> float:
+    def _wc_key(self, asid: int, vpn: int, level: int) -> Tuple[int, ...]:
+        """Walk-cache tag for the non-leaf PTE covering VIRTUAL page
+        ``vpn`` at ``level``: the page table is indexed by VA, and Sv39
+        resolves 9 page-number bits per level, so the level-d entry covers
+        ``vpn >> 9*(levels-1-d)``."""
+        return (asid, level, vpn >> (9 * (self.levels - 1 - level)))
+
+    def walk(self, asid: int, page: int,
+             vpn: Optional[int] = None) -> float:
         """One full page-table walk: up to ``levels`` sequential accesses.
-        Upper levels are few enough to stay cached; the leaf PTE line is
-        cached iff the map pass warmed it and no eviction hit it since."""
+        A walk-cache hit on a non-leaf PTE (tagged on ``vpn``, the virtual
+        page being resolved) skips every level above it. Upper levels are
+        few enough to stay LLC-cached; the leaf PTE line is LLC-cached iff
+        the map pass (or a previous walk's refill) warmed it and no
+        eviction hit it since — a rolled eviction drops the line, and the
+        walk's DRAM refill re-installs it."""
+        vpn = page if vpn is None else vpn
         total_host = 0.0
         evict_p = self.pte_evict_prob + self.host_interference
-        for level in range(self.levels):
-            line = page // 8 if level == self.levels - 1 else -level
-            cached = self.llc and (
-                line in self.llc_resident or level < self.levels - 1)
-            if cached and level == self.levels - 1 and \
-                    self._rng.random() < evict_p:
-                cached = False        # PTE line evicted between map and walk
+        start_level = 0
+        if self.walk_cache is not None:
+            # Probe deepest non-leaf entry first (hardware walk caches
+            # resolve the longest cached prefix).
+            for level in range(self.levels - 2, -1, -1):
+                _, hit = self.walk_cache.lookup(self._wc_key(asid, vpn,
+                                                             level))
+                if hit:
+                    start_level = level + 1
+                    break
+        for level in range(start_level, self.levels):
+            leaf = level == self.levels - 1
+            line = page // 8 if leaf else -level
+            cached = self.llc and (not leaf or line in self.llc_resident)
+            if cached and leaf and self._rng.random() < evict_p:
+                # PTE line evicted between map and walk: it leaves the LLC
+                # (the refill below re-warms it after the walk completes)
+                self.llc_resident.discard(line)
+                cached = False
             total_host += (self.llc_hit_cycles if cached
                            else self.dram_access_cycles)
+            if not leaf and self.walk_cache is not None:
+                # the walker read this non-leaf PTE: install it (not a
+                # device walk of its own — never counts in wc walk stats)
+                self.walk_cache.fill(self._wc_key(asid, vpn, level), 1,
+                                     walked=False)
+        if self.llc:
+            # The walk's leaf access leaves the PTE line LLC-resident: a
+            # hit keeps it, a miss's DRAM refill installs it.
+            self.llc_resident.add(page // 8)
         cost = total_host * self.to_accel
         self.stats.walks += 1
         self.stats.cycles += cost
@@ -183,8 +282,13 @@ class IOAddressSpace:
         self.iommu.host_map_pass(pages)
 
     def extend(self, pages: Sequence[int]) -> None:
-        """Grow the mapping (decode appends crossing a page boundary)."""
-        self.map(pages, start=len(self.table))
+        """Grow the mapping (decode appends crossing a page boundary).
+        Appends past the HIGHEST live logical page — ``len(self.table)``
+        would collide with live pages after a partial ``unmap()`` (holes
+        shrink the table but not the address range) and silently remap
+        them."""
+        start = max(self.table) + 1 if self.table else 0
+        self.map(pages, start=start)
 
     def remap(self, lp: int, pp: int) -> None:
         """Point one logical page at a new physical page (CoW divergence):
@@ -233,7 +337,7 @@ class IOMMU:
         self.walk_model: WalkModel = walk_model or CountingWalk()
         self.tlb_config = tlb
         self.tlb = TranslationCache(tlb.n_entries, policy=tlb.policy,
-                                    seed=tlb.seed)
+                                    seed=tlb.seed, ways=tlb.ways)
         self.epoch = 0
         self._spaces: Dict[int, IOAddressSpace] = {}
 
@@ -300,7 +404,7 @@ class IOMMU:
                 phys = sp.table[page]
             else:
                 phys = page
-        cost = self.walk_model.walk(asid, phys)
+        cost = self.walk_model.walk(asid, phys, vpn=page)
         self.tlb.fill((asid, page), phys)
         if sp is not None and page not in sp.table:
             sp._untracked_fills = True
@@ -338,17 +442,27 @@ class IOMMU:
     def stats(self) -> dict:
         """The unified translation stats schema every layer reports:
 
-          tlb    hits / misses / evictions / invalidations / walks / hit_rate
-          walk   model name + walks / cycles (modeled cost)
+          tlb    hits / misses / evictions / invalidations / walks /
+                 conflict_misses / hit_rate
+          walk   model name + walks / cycles (modeled cost); walkers with a
+                 walk cache add a ``walk_cache:`` block (hits / misses /
+                 geometry)
           epoch  full-flush count
           asids  live address spaces
         """
+        walk = {"model": self.walk_model.name,
+                **self.walk_model.stats.as_dict()}
+        wc = getattr(self.walk_model, "walk_cache", None)
+        if wc is not None:
+            wcs = wc.stats
+            walk["walk_cache"] = dict(
+                hits=wcs.hits, misses=wcs.misses, evictions=wcs.evictions,
+                n_entries=wc.n_entries, ways=wc.ways)
         return {"tlb": self.tlb.stats.as_dict(),
-                "walk": {"model": self.walk_model.name,
-                         **self.walk_model.stats.as_dict()},
+                "walk": walk,
                 "epoch": self.epoch,
                 "asids": self.n_spaces}
 
 
 __all__ = ["CountingWalk", "IOAddressSpace", "IOMMU", "Sv39Walk",
-           "TLBConfig", "WalkModel", "WalkStats"]
+           "TLBConfig", "WalkCacheConfig", "WalkModel", "WalkStats"]

@@ -295,7 +295,8 @@ class PagedKVManager:
                  kv_bytes_per_token: int = 0, offload_mode: str = "zero_copy",
                  layout: Optional[str] = None, prefix_sharing: bool = True,
                  prefix_policy: str = "lru", prefix_cap_pages: int = 0,
-                 tlb_entries: int = 4096, tlb_policy: str = "lru"):
+                 tlb_entries: int = 4096, tlb_policy: str = "lru",
+                 tlb_ways: int = 0):
         assert offload_mode in ("zero_copy", "copy")
         if layout is None:
             layout = "global" if offload_mode == "zero_copy" else "per_slot"
@@ -330,7 +331,8 @@ class PagedKVManager:
         # delta-upload cache over a pure-stats walker — the same IOMMU class
         # the simulator configures as a 4-entry hardware IOTLB + Sv39 walk.
         self.iommu = IOMMU(walk_model=CountingWalk(),
-                           tlb=TLBConfig(tlb_entries, tlb_policy))
+                           tlb=TLBConfig(tlb_entries, tlb_policy,
+                                         ways=tlb_ways))
         self.free_slots = list(range(n_slots - 1, -1, -1))
         self.seqs: Dict[int, SeqState] = {}
         self.lengths = np.zeros((n_slots,), np.int32)
@@ -600,6 +602,7 @@ class PagedKVManager:
                "iommu": {"walk": io["walk"], "epoch": io["epoch"],
                          "asids": io["asids"],
                          "tlb_entries": self.iommu.tlb_config.n_entries,
+                         "tlb_ways": self.iommu.tlb_config.resolved_ways,
                          "tlb_policy": self.iommu.tlb_config.policy},
                "pool_used": used,
                "pool_free": free,

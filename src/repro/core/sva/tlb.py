@@ -1,9 +1,10 @@
-"""Translation cache — the IOTLB analogue, with pluggable replacement.
+"""Translation cache — the IOTLB analogue, with pluggable replacement and
+hardware geometry.
 
 This class is a *component* of the unified IOMMU front-end
 (:mod:`repro.core.sva.iommu`): the paper's 4-entry hardware IOTLB and the
 serving engine's large delta-upload cache are the same class configured
-differently (``TLBConfig(n_entries, policy)``).  No module outside
+differently (``TLBConfig(n_entries, policy, ways=...)``).  No module outside
 ``iommu.py`` constructs it directly — attach an address space to an
 :class:`~repro.core.sva.iommu.IOMMU` instead.
 
@@ -13,12 +14,22 @@ Replacement policies (the Kim-et-al. translation design space):
   fifo    insertion order only; hits never reorder
   lfu     evict the least frequently used entry (ties: oldest insertion)
   random  evict a uniformly random entry (seeded — traces stay reproducible)
+
+Associativity (the second Kim-et-al. axis): ``ways`` splits the cache into
+``n_entries // ways`` sets indexed by the logical page (the last integer
+component of a tuple key); replacement state is kept per set. ``ways == 0``
+or ``ways == n_entries`` is fully associative — one set, bit-identical to
+the historical behavior. A lookup miss whose target set is full while the
+cache as a whole still has free entries is counted as a *conflict miss*
+(a fully-associative cache of the same capacity could have absorbed it);
+with one set that situation cannot arise, so ``conflict_misses`` is always
+0 for fully-associative configs.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Hashable, Iterable, Optional, Tuple
+from typing import Hashable, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -32,6 +43,7 @@ class TLBStats:
     evictions: int = 0
     invalidations: int = 0
     walks: int = 0           # page-table walks performed (one per genuine miss)
+    conflict_misses: int = 0  # misses a same-size fully-assoc cache had room for
 
     @property
     def hit_rate(self) -> float:
@@ -41,46 +53,80 @@ class TLBStats:
     def as_dict(self):
         return dict(hits=self.hits, misses=self.misses,
                     evictions=self.evictions, invalidations=self.invalidations,
-                    walks=self.walks, hit_rate=round(self.hit_rate, 4))
+                    walks=self.walks, conflict_misses=self.conflict_misses,
+                    hit_rate=round(self.hit_rate, 4))
 
 
 class TranslationCache:
-    """(key -> value) cache with epoch invalidation and pluggable policy."""
+    """(key -> value) set-associative cache with epoch invalidation and
+    pluggable policy. One set (``ways in (0, n_entries)``) is fully
+    associative."""
 
-    def __init__(self, n_entries: int, policy: str = "lru", seed: int = 0):
+    def __init__(self, n_entries: int, policy: str = "lru", seed: int = 0,
+                 ways: int = 0):
         assert n_entries >= 1
         if policy not in POLICIES:
             raise ValueError(f"policy={policy!r} (expected one of {POLICIES})")
+        ways = ways or n_entries
+        if ways < 1 or ways > n_entries or n_entries % ways:
+            raise ValueError(
+                f"ways={ways} must divide n_entries={n_entries} "
+                f"(1 <= ways <= n_entries)")
         self.n_entries = n_entries
+        self.ways = ways
+        self.n_sets = n_entries // ways
         self.policy = policy
-        self._map: OrderedDict = OrderedDict()
+        self._sets: List[OrderedDict] = [OrderedDict()
+                                         for _ in range(self.n_sets)]
+        self._set0 = self._sets[0]      # fully-assoc fast path (hot loop)
         self._freq: dict = {}
-        self._rng = np.random.default_rng(seed)
+        self._n = 0                               # total resident entries
+        self._rng = np.random.default_rng(seed)   # shared across sets
         self.stats = TLBStats()
+
+    # ------------------------------------------------------------- indexing
+    def _set_index(self, key: Hashable) -> int:
+        """Set selection on the logical page: the last integer component of
+        a tuple key (the IOMMU keys ``(asid, logical_page)``), a bare int
+        key, or ``hash(key)`` for anything else."""
+        if self.n_sets == 1:
+            return 0
+        page = key
+        if isinstance(page, tuple) and page:
+            page = page[-1]
+        if not isinstance(page, (int, np.integer)):
+            page = hash(page)
+        return int(page) % self.n_sets
 
     def lookup(self, key: Hashable) -> Tuple[Optional[int], bool]:
         """Returns (value, hit)."""
-        if key in self._map:
+        s = self._set0 if self.n_sets == 1 \
+            else self._sets[self._set_index(key)]
+        if key in s:
             if self.policy == "lru":
-                self._map.move_to_end(key)
+                s.move_to_end(key)
             elif self.policy == "lfu":
                 self._freq[key] += 1
             self.stats.hits += 1
-            return self._map[key], True
+            return s[key], True
         self.stats.misses += 1
+        if len(s) >= self.ways and self._n < self.n_entries:
+            self.stats.conflict_misses += 1
         return None, False
 
-    def _evict_one(self) -> None:
+    def _evict_one(self, set_index: int) -> None:
+        s = self._sets[set_index]
         if self.policy in ("lru", "fifo"):
-            victim = next(iter(self._map))
+            victim = next(iter(s))
         elif self.policy == "lfu":
             # min frequency; ties broken by insertion order (OrderedDict scan)
-            victim = min(self._map, key=lambda k: self._freq[k])
+            victim = min(s, key=lambda k: self._freq[k])
         else:                                     # random (seeded)
-            keys = list(self._map)
+            keys = list(s)
             victim = keys[int(self._rng.integers(len(keys)))]
-        del self._map[victim]
+        del s[victim]
         self._freq.pop(victim, None)
+        self._n -= 1
         self.stats.evictions += 1
 
     def fill(self, key: Hashable, value, walked: bool = True) -> None:
@@ -89,36 +135,52 @@ class TranslationCache:
         refreshing a live entry (e.g. re-warming on ``extend``) or a host
         pre-warm at map time (``walked=False`` — the driver wrote the PTE,
         no device walk happened) must not inflate Fig.5-style walk
-        counts."""
-        if key in self._map:
+        counts. A refresh still counts as a *use* (it re-ups recency under
+        ``lru`` and frequency under ``lfu`` — a page kept hot by map/extend
+        re-warms must not look cold to the replacement policy)."""
+        si = 0 if self.n_sets == 1 else self._set_index(key)
+        s = self._sets[si]
+        if key in s:
             if self.policy == "lru":
-                self._map.move_to_end(key)
-            self._map[key] = value
+                s.move_to_end(key)
+            elif self.policy == "lfu":
+                self._freq[key] += 1
+            s[key] = value
             return
         if walked:
             self.stats.walks += 1
-        if len(self._map) >= self.n_entries:
-            self._evict_one()
-        self._map[key] = value
+        if len(s) >= self.ways:
+            self._evict_one(si)
+        s[key] = value
         self._freq[key] = 1
+        self._n += 1
 
     def invalidate(self) -> None:
         """Full invalidation: drop everything (paper's self-invalidation).
         The epoch counter lives on the owning IOMMU — the single owner of
         full-flush state."""
-        self._map.clear()
+        for s in self._sets:
+            s.clear()
         self._freq.clear()
+        self._n = 0
         self.stats.invalidations += 1
 
     def invalidate_key(self, key: Hashable) -> None:
-        self._map.pop(key, None)
+        s = self._sets[self._set_index(key)]
+        if s.pop(key, None) is not None:
+            self._n -= 1
         self._freq.pop(key, None)
 
     def keys(self) -> Iterable[Hashable]:
-        return list(self._map.keys())
+        out: List[Hashable] = []
+        for s in self._sets:
+            out.extend(s.keys())
+        return out
 
     def __contains__(self, key: Hashable) -> bool:
-        return key in self._map
+        s = self._set0 if self.n_sets == 1 \
+            else self._sets[self._set_index(key)]
+        return key in s
 
     def __len__(self) -> int:
-        return len(self._map)
+        return self._n

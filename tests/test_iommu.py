@@ -179,6 +179,28 @@ def test_trace_serving_config_hits_more_than_iotlb():
     assert big["walks"] <= small["walks"]
 
 
+# ------------------------------------------------------- address spaces
+
+def test_extend_after_partial_unmap_never_remaps_live_page():
+    """Regression: ``extend()`` used ``start=len(self.table)``, which after
+    a partial ``unmap()`` (holes shrink the table, not the address range)
+    collided with live logical pages and silently remapped them."""
+    iommu = IOMMU(walk_model=CountingWalk(), tlb=TLBConfig(64))
+    sp = iommu.attach(0)
+    sp.map([100, 101, 102, 103])
+    sp.unmap([1])                          # hole: len(table)==3, max lp==3
+    sp.extend([200])
+    assert sp.table[3] == 103              # live page NOT remapped
+    assert sp.table[4] == 200              # appended past the live max
+    assert 1 not in sp.table
+    phys, _, _ = sp.translate(3)
+    assert phys == 103
+    # an emptied space restarts at logical page 0
+    sp.unmap()
+    sp.extend([300])
+    assert sp.table == {0: 300}
+
+
 # ------------------------------------------------------- Sv39 walk model
 
 def test_sv39_llc_warming_and_interference():
@@ -193,6 +215,31 @@ def test_sv39_llc_warming_and_interference():
     assert warm == pytest.approx(30.0)
     assert on.stats.walks == 2
     assert on.stats.cycles == pytest.approx(cold + warm)
+
+
+def test_sv39_refill_installs_leaf_pte_line():
+    """Regression: the walk's DRAM refill never installed the leaf PTE
+    line, so a cold line stayed DRAM-priced forever even with the LLC on —
+    only a host map pass could ever warm it."""
+    w = Sv39Walk(levels=3, dram_access_cycles=235.0, llc=True,
+                 pte_evict_prob=0.0, to_accel=1.0)
+    cold = w.walk(0, 40)                  # leaf line never warmed
+    warm = w.walk(0, 40)                  # the refill just installed it
+    assert cold == pytest.approx(10 + 10 + 235.0)
+    assert warm == pytest.approx(30.0)
+
+
+def test_sv39_eviction_drops_line_then_refill_rewarns():
+    """An eviction roll removes the leaf PTE line from the LLC resident
+    set; the walk's refill re-installs it, so the next walk sees a warm
+    line again (it must NOT 'hit' on the evicted line without a refill)."""
+    w = Sv39Walk(levels=3, dram_access_cycles=235.0, llc=True,
+                 pte_evict_prob=1.0, to_accel=1.0)
+    w.host_map_pass([40])
+    assert 40 // 8 in w.llc_resident
+    assert w.walk(0, 40) == pytest.approx(10 + 10 + 235.0)   # always evicted
+    w.pte_evict_prob = 0.0
+    assert w.walk(0, 40) == pytest.approx(30.0)              # refill warmed it
 
 
 def test_memory_system_delegates_to_iommu():

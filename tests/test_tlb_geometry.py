@@ -1,0 +1,353 @@
+"""TLB hardware geometry: set associativity (conflict misses,
+fully-associative equivalence), refresh-as-use replacement accounting, the
+Sv39 walk cache, and trace-parity reproducibility of the design-space
+sweep over a recorded serving-manager trace."""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.tlb_sweep import Geometry, replay_geometry, sweep_grid
+from repro.core.sva.iommu import (IOMMU, CountingWalk, Sv39Walk, TLBConfig,
+                                  WalkCacheConfig)
+from repro.core.sva.kv_manager import PagedKVManager
+from repro.core.sva.tlb import POLICIES
+
+
+def _mk(entries, policy="lru", ways=0, seed=0):
+    return IOMMU(walk_model=CountingWalk(),
+                 tlb=TLBConfig(entries, policy, seed=seed, ways=ways))
+
+
+# ------------------------------------------------- refresh-as-use (lfu fix)
+
+def test_fill_refresh_counts_as_use_under_lfu():
+    """Regression: re-filling a resident entry (map/extend re-warm) did not
+    bump the lfu frequency, so a page kept hot by the host looked cold to
+    the replacement policy and was wrongly evicted."""
+    iommu = _mk(2, "lfu")
+    tlb = iommu.tlb
+    tlb.fill("a", 1)
+    tlb.fill("a", 1)                      # refresh == a use (freq 2)
+    tlb.fill("b", 1)                      # freq 1
+    tlb.fill("c", 1)                      # evicts the cold b, NOT a
+    assert "a" in tlb and "b" not in tlb and "c" in tlb
+
+
+def test_fill_refresh_semantics_all_policies():
+    """Refresh behavior is pinned per policy: lru re-ups recency, lfu
+    frequency; fifo keeps insertion order; random stays seeded-
+    deterministic."""
+    # lru: refreshing a makes b the LRU victim
+    iommu = _mk(2, "lru")
+    iommu.tlb.fill("a", 1)
+    iommu.tlb.fill("b", 1)
+    iommu.tlb.fill("a", 2)                # refresh: a is MRU now
+    iommu.tlb.fill("c", 1)
+    assert "a" in iommu.tlb and "b" not in iommu.tlb
+    # fifo: a refresh never reorders — a is still the oldest insertion
+    iommu = _mk(2, "fifo")
+    iommu.tlb.fill("a", 1)
+    iommu.tlb.fill("b", 1)
+    iommu.tlb.fill("a", 2)
+    iommu.tlb.fill("c", 1)
+    assert "a" not in iommu.tlb and "b" in iommu.tlb
+    # random: same seed + same op sequence (with refreshes) => same state
+    def rand_state():
+        iommu = _mk(2, "random", seed=5)
+        for k in ("a", "b", "a", "c", "b", "d"):
+            iommu.tlb.fill(k, 1)
+        return sorted(map(str, iommu.tlb.keys())), iommu.stats()
+    assert rand_state() == rand_state()
+
+
+# ----------------------------------------------------- set associativity
+
+def test_fully_associative_ways_equals_entries_identical():
+    """``ways == n_entries`` (and ways omitted) must reproduce the
+    fully-associative behavior bit-identically, for every policy."""
+    refs = [1, 2, 1, 3, 9, 1, 2, 17, 3, 1, 9, 25, 2]
+    for policy in POLICIES:
+        base = _mk(4, policy, seed=7)
+        same = _mk(4, policy, ways=4, seed=7)
+        for r in refs:
+            base.translate(0, r)
+            same.translate(0, r)
+        assert base.stats() == same.stats()
+        assert sorted(base.tlb.keys()) == sorted(same.tlb.keys())
+        assert base.tlb.stats.conflict_misses == 0
+        assert same.tlb.stats.conflict_misses == 0
+
+
+def test_same_set_thrash_counts_conflict_misses():
+    """Direct-mapped 4-entry TLB, pages 0/4/8 all land in set 0: they
+    thrash one way while 3 sets sit empty — every re-miss is a conflict
+    miss. The fully-associative cache of the same size absorbs all three."""
+    dm = _mk(4, "lru", ways=1)
+    fa = _mk(4, "lru")
+    refs = [0, 4, 8, 0, 4, 8, 0, 4, 8]
+    for r in refs:
+        dm.translate(0, r)
+        fa.translate(0, r)
+    assert fa.tlb.stats.hits == 6                 # warm after first pass
+    assert fa.tlb.stats.conflict_misses == 0
+    assert dm.tlb.stats.hits == 0                 # same-set thrash
+    # every miss after the first fill finds set 0 full while 3 sets sit
+    # empty — 8 of the 9 misses are conflict misses by the documented
+    # definition (set full, cache not full)
+    assert dm.tlb.stats.conflict_misses == 8
+    assert len(dm.tlb) == 1                       # one way of one set live
+    # different sets don't conflict: pages 0..3 fill all 4 sets and stay
+    dm2 = _mk(4, "lru", ways=1)
+    for r in (0, 1, 2, 3) * 3:
+        dm2.translate(0, r)
+    assert dm2.tlb.stats.hits == 8
+    assert dm2.tlb.stats.conflict_misses == 0
+
+
+def test_set_occupancy_bounds():
+    """No set ever exceeds ``ways``; total never exceeds ``n_entries``."""
+    iommu = _mk(8, "lru", ways=2)
+    for r in range(64):
+        iommu.translate(0, r)
+        assert len(iommu.tlb) <= 8
+        assert all(len(s) <= 2 for s in iommu.tlb._sets)
+    assert len(iommu.tlb) == 8                    # all sets full
+
+
+def test_set_indexing_uses_logical_page_across_asids():
+    """Keys are (asid, logical_page): the set is chosen by the PAGE, so two
+    ASIDs touching the same page land in the same set."""
+    iommu = IOMMU(walk_model=CountingWalk(), tlb=TLBConfig(4, ways=1))
+    a, b = iommu.attach(1), iommu.attach(2)
+    a.map([50], warm=False)
+    b.map([60], warm=False)
+    a.translate(0)
+    b.translate(0)                        # same page 0 -> same set: evicts
+    assert (1, 0) not in iommu.tlb
+    assert (2, 0) in iommu.tlb
+    assert iommu.tlb.stats.evictions == 1
+
+
+def test_tlb_config_ways_validation():
+    with pytest.raises(ValueError):
+        TLBConfig(4, ways=3)              # does not divide
+    with pytest.raises(ValueError):
+        TLBConfig(4, ways=8)              # exceeds entries
+    assert TLBConfig(4, ways=0).resolved_ways == 4
+    assert TLBConfig(8, ways=2).n_sets == 4
+
+
+# ------------------------------------------------------------ walk cache
+
+def test_walk_cache_skips_upper_levels():
+    """A hit on a cached non-leaf PTE skips every level above it: same
+    2 MiB region -> leaf access only; same 1 GiB region -> two accesses."""
+    w = Sv39Walk(levels=3, dram_access_cycles=235.0, llc=False,
+                 to_accel=1.0, walk_cache=WalkCacheConfig(8))
+    assert w.walk(0, 0) == pytest.approx(3 * 235.0)       # cold: full walk
+    assert w.walk(0, 1) == pytest.approx(235.0)           # L1 hit: leaf only
+    assert w.walk_cache.stats.hits == 1
+    assert w.walk(0, 512) == pytest.approx(2 * 235.0)     # L0 hit: 2 levels
+    assert w.walk(0, 1 << 18) == pytest.approx(3 * 235.0)  # new 1 GiB region
+    assert w.stats.walks == 4
+
+
+def test_walk_cache_off_is_bit_identical():
+    """``WalkCacheConfig(0)`` (and no config at all) reproduces the plain
+    sequential walker, and the stats schema carries no walk_cache block."""
+    plain = Sv39Walk(levels=3, dram_access_cycles=235.0, llc=True,
+                     pte_evict_prob=0.1, to_accel=1.0, seed=3)
+    off = Sv39Walk(levels=3, dram_access_cycles=235.0, llc=True,
+                   pte_evict_prob=0.1, to_accel=1.0, seed=3,
+                   walk_cache=WalkCacheConfig(0))
+    plain.host_map_pass(range(32))
+    off.host_map_pass(range(32))
+    for p in list(range(32)) * 3:
+        assert plain.walk(0, p) == off.walk(0, p)
+    assert off.walk_cache is None
+    assert "walk_cache" not in IOMMU(walk_model=off).stats()["walk"]
+    on = IOMMU(walk_model=Sv39Walk(walk_cache=WalkCacheConfig(8, ways=2)))
+    wc = on.stats()["walk"]["walk_cache"]
+    assert wc == dict(hits=0, misses=0, evictions=0, n_entries=8, ways=2)
+
+
+def test_walk_cache_geometry_is_set_associative():
+    """The walk cache is a TranslationCache too: a 1-way config conflicts
+    on same-set region tags where the fully-associative one holds both."""
+    mk = lambda ways: Sv39Walk(levels=3, dram_access_cycles=100.0,
+                               llc=False, to_accel=1.0,
+                               walk_cache=WalkCacheConfig(2, ways=ways))
+    fa, dm = mk(0), mk(1)
+    # regions 0 and 2 (L1 tags 0 and 2) collide in a 2-set 1-way cache
+    for w in (fa, dm):
+        w.walk(0, 0)
+        w.walk(0, 2 * 512)
+        w.walk(0, 1)                       # L1 tag 0 again
+    assert fa.walk_cache.stats.hits >= 1   # tag 0 still resident
+    assert dm.walk_cache.stats.conflict_misses >= 1
+
+
+# ----------------------------------------------------- sweep trace parity
+
+def _record_manager_trace():
+    """Engine-format translation trace (map / step+tokens / unmap) off the
+    REAL serving manager — the sweep's input, without needing jax."""
+    mgr = PagedKVManager(n_slots=3, max_pages_per_slot=4, page_size=4)
+    trace = []
+    prompt = list(range(100, 110))
+    a = mgr.admit(0, 10, 4, tokens=prompt)
+    trace.append(("map", list(a.pages)))
+    b = mgr.admit(1, 10, 4, tokens=prompt)              # shares the prefix
+    trace.append(("map", list(b.pages[b.shared_pages:])))
+    for step in range(4):
+        for sid in (0, 1):
+            if sid in mgr.seqs and not mgr.seqs[sid].done:
+                mgr.append_token(sid, step)             # may CoW
+        for _, dst in mgr.drain_cow_copies():
+            trace.append(("map", [dst]))
+        accesses = mgr.translate_step()
+        tokens = int(mgr.device_lengths().sum())
+        trace.append(("step", accesses, tokens))
+    st = mgr.seqs[0]
+    trace.append(("unmap", st.slot, len(st.pages)))
+    mgr.release(0)
+    c = mgr.admit(2, 8, 4, tokens=list(range(50, 58)))
+    trace.append(("map", list(c.pages)))
+    trace.append(("step", mgr.translate_step(),
+                  int(mgr.device_lengths().sum())))
+    return trace
+
+
+def test_sweep_replay_is_trace_parity_reproducible():
+    """The SAME recorded manager trace through the SAME geometry yields
+    EXACTLY the same sweep row — across associative, set-associative,
+    walk-cached, and seeded-random design points."""
+    t1, t2 = _record_manager_trace(), _record_manager_trace()
+    assert t1 == t2
+    for geom in (Geometry(4, 0, "lru", 0), Geometry(4, 1, "lru", 8),
+                 Geometry(8, 2, "random", 8), Geometry(16, 0, "lfu", 0)):
+        r1 = replay_geometry(t1, geom, kv_bytes_per_token=64,
+                             compute_per_token=32.0)
+        r2 = replay_geometry(t2, geom, kv_bytes_per_token=64,
+                             compute_per_token=32.0)
+        assert r1 == r2
+
+
+def test_sweep_grid_covers_axes_without_duplicates():
+    grid = sweep_grid(smoke=False)
+    assert len(grid) == len({(g.entries, g.resolved_ways, g.policy,
+                              g.wc_entries) for g in grid})
+    assert len({g.entries for g in grid}) >= 3          # size axis
+    assert len({g.resolved_ways != g.entries for g in grid}) == 2  # assoc
+    assert len({g.policy for g in grid}) == len(POLICIES)
+    assert len({g.wc_entries for g in grid}) >= 2       # walk-cache axis
+    smoke = sweep_grid(smoke=True)
+    assert 0 < len(smoke) < len(grid)
+
+
+def test_sweep_geometry_differentiates_on_manager_trace():
+    """The design-space claim at test scale: on a reuse-heavy serving
+    trace, a larger / better-geometry IOTLB walks less."""
+    trace = _record_manager_trace()
+    kw = dict(kv_bytes_per_token=64, compute_per_token=32.0)
+    small = replay_geometry(trace, Geometry(4, 0, "lru", 0), **kw)
+    big = replay_geometry(trace, Geometry(64, 0, "lru", 0), **kw)
+    assert big["walks"] <= small["walks"]
+    assert big["ptw_pct_mean"] <= small["ptw_pct_mean"]
+    wc = replay_geometry(trace, Geometry(4, 0, "lru", 16), **kw)
+    assert wc["ptw_cycles"] < small["ptw_cycles"]       # walk cache helps
+    assert wc["wc_hits"] > 0
+
+
+# ------------------------------------------------- hypothesis properties
+
+def test_geometry_hypothesis_invariants():
+    hypothesis = pytest.importorskip("hypothesis")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.integers(0, 31), min_size=1, max_size=120),
+           st.sampled_from(POLICIES),
+           st.sampled_from([(4, 1), (4, 2), (8, 2), (8, 8), (16, 4)]))
+    def prop(refs, policy, geom):
+        entries, ways = geom
+        sa = _mk(entries, policy, ways=ways, seed=1)
+        fa = _mk(entries, policy, ways=entries, seed=1)
+        df = _mk(entries, policy, seed=1)
+        for r in refs:
+            sa.translate(0, r)
+            fa.translate(0, r)
+            df.translate(0, r)
+            # occupancy bounds hold at every step
+            assert all(len(s) <= sa.tlb.ways for s in sa.tlb._sets)
+            assert len(sa.tlb) <= entries
+        # ways == n_entries is bit-identical to the default (fully assoc)
+        assert fa.stats() == df.stats()
+        assert sorted(fa.tlb.keys()) == sorted(df.tlb.keys())
+        # fully-associative caches never record a conflict miss
+        assert fa.tlb.stats.conflict_misses == 0
+        # every miss walked, every access either hit or missed
+        s = sa.tlb.stats
+        assert s.hits + s.misses == len(refs)
+        assert s.walks == s.misses == sa.walk_model.stats.walks
+        assert s.conflict_misses <= s.misses
+
+    prop()
+
+
+def test_walk_cache_hypothesis_accounting():
+    hypothesis = pytest.importorskip("hypothesis")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(0, 1 << 20), min_size=1, max_size=60),
+           st.sampled_from([2, 4, 8]))
+    def prop(pages, wc_entries):
+        w = Sv39Walk(levels=3, dram_access_cycles=100.0, llc=False,
+                     to_accel=1.0, walk_cache=WalkCacheConfig(wc_entries))
+        plain = Sv39Walk(levels=3, dram_access_cycles=100.0, llc=False,
+                         to_accel=1.0)
+        for p in pages:
+            cost = w.walk(0, p)
+            # a walk always pays the leaf access and never MORE than the
+            # cache-less walker
+            assert 100.0 <= cost <= plain.walk(0, p)
+        assert w.stats.walks == len(pages)
+        wc = w.walk_cache.stats
+        # a walk probes the deepest non-leaf level, plus the root on a
+        # miss: 1..2 probes per walk, all accounted as hits or misses
+        assert len(pages) <= wc.hits + wc.misses <= 2 * len(pages)
+        assert len(w.walk_cache) <= wc_entries
+
+    prop()
+
+
+def test_sweep_hypothesis_trace_parity():
+    hypothesis = pytest.importorskip("hypothesis")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    access = st.tuples(st.integers(0, 3), st.integers(0, 7),
+                       st.integers(0, 63))
+    step = st.tuples(st.just("step"), st.lists(access, max_size=12),
+                     st.integers(0, 64))
+    mapev = st.tuples(st.just("map"), st.lists(st.integers(0, 63),
+                                               max_size=8))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.one_of(step, mapev), min_size=1, max_size=30),
+           st.sampled_from([Geometry(4, 1, "lru", 0),
+                            Geometry(8, 2, "random", 8),
+                            Geometry(16, 0, "lfu", 4)]))
+    def prop(trace, geom):
+        trace = [tuple(ev) for ev in trace]
+        kw = dict(kv_bytes_per_token=16, compute_per_token=8.0)
+        assert replay_geometry(trace, geom, **kw) == \
+            replay_geometry(trace, geom, **kw)
+
+    prop()
