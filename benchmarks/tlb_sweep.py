@@ -1,4 +1,5 @@
-"""Benchmark E6 — trace-driven translation design-space sweep (Kim et al.).
+"""Benchmark E6 — trace-driven translation design-space sweep (Kim et al.),
+static grid + adaptive front-end rows.
 
 Records real serving translation traces (``ServingEngine(
 record_translation_trace=True)``) for two deployment profiles — a
@@ -14,11 +15,22 @@ paper pays 4.2-17.6% of accelerator runtime for translation, i.e. exactly
 the regime where IOTLB/walk-cache geometry decides the design space (with
 LLC-resident PTEs the walker is ~free and every geometry ties). Every
 replay of the same trace is bit-reproducible: the walker draws no RNG with
-the LLC off and the ``random`` policy is seeded.
+the LLC off, the ``random`` policy is seeded, and the prefetcher/tuner are
+deterministic.
 
-Emits the full grid as CSV (``--out``, default ``tlb_sweep.csv``) and
-prints summary rows: PTW overhead as a % of modeled decode-step runtime
-per geometry axis, plus the best geometry per deployment.
+After the static grid, the ADAPTIVE rows replay the same traces with the
+IOTLB *prefetcher* (``stream`` / ``next_page``) and with the online
+geometry *auto-tuner* enabled, so static-vs-adaptive is one CSV: the
+``adaptive`` column labels the row, ``demand_ptw_cycles`` is the
+demand-exposed translation cost (what a prefetcher actually lowers; equal
+to ``ptw_cycles`` for static rows), and the ``prefetch_*`` columns carry
+the issued/useful/late counters. See ``benchmarks/README.md`` for the
+full column contract.
+
+Emits the grid + adaptive rows as CSV (``--out``, default
+``tlb_sweep.csv``) and prints summary rows: PTW overhead as a % of modeled
+decode-step runtime per geometry axis, the best static geometry per
+deployment, and the adaptive rows' win/loss against it.
 
 ``--smoke`` shrinks the grid and the recorded workload (CI smoke path —
 wired into ``benchmarks/run.py --only sweep`` and the figure-benchmarks
@@ -31,7 +43,7 @@ import csv
 import sys
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -40,7 +52,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from benchmarks.trace_replay import replay_trace
 from repro.configs.paper_soc import PaperSoCConfig
 from repro.core.simulator.platform import H2A
-from repro.core.sva.iommu import (IOMMU, Sv39Walk, TLBConfig,
+from repro.core.sva.iommu import (IOMMU, AutoTuneConfig, PrefetchConfig,
+                                  Sv39Walk, TLBAutoTuner, TLBConfig,
                                   WalkCacheConfig)
 from repro.core.sva.tlb import POLICIES
 
@@ -130,10 +143,18 @@ def record_traces(dry_run: bool = False) -> Tuple[Dict[str, list], dict]:
 
 def replay_geometry(trace, geom: Geometry, kv_bytes_per_token: int,
                     compute_per_token: float, dram_latency: int = 200,
-                    soc: PaperSoCConfig = None) -> dict:
-    """Price one recorded serving trace under one hardware geometry.
-    Returns the CSV row: TLB/walk-cache stats + PTW overhead as a % of each
-    modeled decode step's accelerator runtime."""
+                    soc: PaperSoCConfig = None,
+                    prefetch: Optional[PrefetchConfig] = None,
+                    autotune: Optional[AutoTuneConfig] = None,
+                    adaptive: str = "static") -> dict:
+    """Price one recorded serving trace under one hardware geometry —
+    optionally with the IOTLB prefetcher and/or the online geometry
+    auto-tuner armed (``geom`` is then the STARTING geometry). Returns the
+    CSV row: TLB/walk-cache stats + PTW overhead as a % of each modeled
+    decode step's accelerator runtime. ``demand_ptw_cycles`` is the
+    demand-exposed translation cost (what prefetching lowers);
+    ``ptw_cycles`` stays the walk model's total, which for adaptive rows
+    also contains the prefetch walks done off the demand path."""
     soc = soc or PaperSoCConfig()
     walker = Sv39Walk(
         levels=soc.ptw_levels,
@@ -141,13 +162,16 @@ def replay_geometry(trace, geom: Geometry, kv_bytes_per_token: int,
         llc=False, to_accel=H2A,
         walk_cache=WalkCacheConfig(geom.wc_entries, policy="lru"))
     iommu = IOMMU(walk_model=walker,
-                  tlb=TLBConfig(geom.entries, geom.policy, ways=geom.ways))
+                  tlb=TLBConfig(geom.entries, geom.policy, ways=geom.ways),
+                  prefetch=prefetch or PrefetchConfig())
+    tuner = TLBAutoTuner(iommu, autotune) if autotune is not None else None
     per_step = replay_trace(trace, iommu, kv_bytes_per_token,
-                            compute_per_token, soc, dram_latency)
+                            compute_per_token, soc, dram_latency,
+                            tuner=tuner)
     pcts = [100.0 * ptw / max(step, 1e-9) for ptw, step in per_step]
     tlb = iommu.tlb.stats
     wc = walker.walk_cache.stats if walker.walk_cache is not None else None
-    return dict(
+    row = dict(
         n_entries=geom.entries, ways=geom.resolved_ways, policy=geom.policy,
         wc_entries=geom.wc_entries,
         tlb_hits=tlb.hits, tlb_misses=tlb.misses,
@@ -157,13 +181,57 @@ def replay_geometry(trace, geom: Geometry, kv_bytes_per_token: int,
         wc_hits=wc.hits if wc else 0, wc_misses=wc.misses if wc else 0,
         ptw_cycles=round(walker.stats.cycles, 1),
         ptw_pct_mean=round(float(np.mean(pcts)) if pcts else 0.0, 3),
-        ptw_pct_max=round(float(np.max(pcts)) if pcts else 0.0, 3))
+        ptw_pct_max=round(float(np.max(pcts)) if pcts else 0.0, 3),
+        adaptive=adaptive,
+        prefetch_issued=tlb.prefetch_issued,
+        prefetch_useful=tlb.prefetch_useful,
+        prefetch_late=tlb.prefetch_late,
+        demand_ptw_cycles=round(sum(p for p, _ in per_step), 1))
+    if tuner is not None:
+        ts = tuner.stats()
+        row["n_entries"] = ts["current"]["n_entries"]   # converged geometry
+        row["ways"] = ts["current"]["ways"]
+        row["policy"] = ts["current"]["policy"]
+        row["_tuner"] = ts                              # not a CSV column
+    return row
 
 
 FIELDS = ("deployment", "n_entries", "ways", "policy", "wc_entries",
           "tlb_hits", "tlb_misses", "conflict_misses", "hit_rate", "walks",
           "wc_hits", "wc_misses", "ptw_cycles", "ptw_pct_mean",
-          "ptw_pct_max")
+          "ptw_pct_max", "adaptive", "prefetch_issued", "prefetch_useful",
+          "prefetch_late", "demand_ptw_cycles")
+
+
+def adaptive_rows(trace, best_geom: Geometry, consts: dict,
+                  dram_latency: int, smoke: bool = False) -> List[dict]:
+    """Replay one trace with the adaptive front-end armed: stream /
+    next_page prefetching on both the paper's 4-entry IOTLB and the best
+    static geometry, plus the online auto-tuner walking an entries ladder.
+    Returns CSV rows (``adaptive`` column labels each configuration)."""
+    out: List[dict] = []
+    paper = Geometry(4, 0, "lru", 0)
+    # The run-ahead distance must fit the IOTLB: on the paper's 4-entry
+    # geometry the stream prefetcher runs 2 ahead (more would evict its own
+    # unused fills); on the sweep's best static geometry it can run deep.
+    pf_points = [("prefetch:next_page:d2", paper,
+                  PrefetchConfig("next_page", degree=2)),
+                 ("prefetch:stream:d2", paper,
+                  PrefetchConfig("stream", degree=2, distance=2)),
+                 ("prefetch:stream:d4+best", best_geom,
+                  PrefetchConfig("stream", degree=4, distance=8))]
+    for label, geom, pf in pf_points:
+        out.append(replay_geometry(trace, geom, dram_latency=dram_latency,
+                                   prefetch=pf, adaptive=label, **consts))
+    ladder = (4, 16) if smoke else (4, 16, 64)
+    cands = tuple(TLBConfig(e, "lru") for e in ladder)
+    tune = AutoTuneConfig(interval_steps=1 if smoke else 4,
+                          candidates=cands)
+    out.append(replay_geometry(trace, Geometry(ladder[0], 0, "lru",
+                                               best_geom.wc_entries),
+                               dram_latency=dram_latency, autotune=tune,
+                               adaptive="autotune", **consts))
+    return out
 
 
 def run(smoke: bool = False, out: str = "tlb_sweep.csv",
@@ -172,6 +240,7 @@ def run(smoke: bool = False, out: str = "tlb_sweep.csv",
     grid = sweep_grid(smoke)
     rows: List[str] = []
     results: Dict[str, List[dict]] = {}
+    adaptive: Dict[str, List[dict]] = {}
     for dep, trace in traces.items():
         n_steps = sum(1 for ev in trace if ev[0] == "step")
         rows.append(f"tlb_sweep.trace.{dep},{n_steps},decode steps recorded "
@@ -182,15 +251,35 @@ def run(smoke: bool = False, out: str = "tlb_sweep.csv",
                                 **consts)
             r["deployment"] = dep
             results[dep].append(r)
+    # ONE best-static pick per deployment, shared by the adaptive rows'
+    # baseline and the tlb_sweep.best.* summary (so the two can never
+    # silently disagree about what "best" means).
+    best_key = lambda r: (r["ptw_pct_mean"], r["n_entries"], r["ways"],
+                          r["wc_entries"])
+    best = {dep: min(rs, key=best_key) for dep, rs in results.items()}
+    for dep, trace in traces.items():
+        b = best[dep]
+        best_geom = Geometry(b["n_entries"],
+                             0 if b["ways"] == b["n_entries"]
+                             else b["ways"], b["policy"], b["wc_entries"])
+        adaptive[dep] = adaptive_rows(trace, best_geom, consts,
+                                      dram_latency, smoke=smoke)
+        for r in adaptive[dep]:
+            r["deployment"] = dep
 
     with open(out, "w", newline="") as f:
-        w = csv.DictWriter(f, fieldnames=FIELDS)
+        w = csv.DictWriter(f, fieldnames=FIELDS, extrasaction="ignore")
         w.writeheader()
         for dep in results:
             w.writerows(results[dep])
-    n_rows = sum(len(v) for v in results.values())
+        for dep in adaptive:
+            w.writerows(adaptive[dep])
+    n_rows = sum(len(v) for v in results.values()) \
+        + sum(len(v) for v in adaptive.values())
     rows.append(f"tlb_sweep.grid,{len(grid)},geometries x "
-                f"{len(results)} deployments -> {n_rows} CSV rows ({out})")
+                f"{len(results)} deployments + "
+                f"{sum(len(v) for v in adaptive.values())} adaptive rows "
+                f"-> {n_rows} CSV rows ({out})")
 
     for dep, rs in results.items():
         # Axis cuts at the paper's 4-entry IOTLB (hold the rest at lru/wc0):
@@ -220,13 +309,31 @@ def run(smoke: bool = False, out: str = "tlb_sweep.csv",
                                         key=lambda r: r["n_entries"]))
         rows.append(f"tlb_sweep.{dep}.size_axis,{len(sizes)},"
                     f"fully-assoc lru PTW% by entries: {span}")
-        best = min(rs, key=lambda r: (r["ptw_pct_mean"], r["n_entries"],
-                                      r["ways"], r["wc_entries"]))
+        b = best[dep]
         rows.append(
-            f"tlb_sweep.best.{dep},{best['ptw_pct_mean']:.2f},"
-            f"PTW% of decode-step runtime @ entries={best['n_entries']} "
-            f"ways={best['ways']} policy={best['policy']} "
-            f"wc={best['wc_entries']} (hit_rate={best['hit_rate']})")
+            f"tlb_sweep.best.{dep},{b['ptw_pct_mean']:.2f},"
+            f"PTW% of decode-step runtime @ entries={b['n_entries']} "
+            f"ways={b['ways']} policy={b['policy']} "
+            f"wc={b['wc_entries']} (hit_rate={b['hit_rate']})")
+        # ------------------------- adaptive front-end vs the best static
+        for r in adaptive[dep]:
+            label = r["adaptive"].replace(":", "_").replace("+", "_")
+            extra = ""
+            if r["adaptive"] == "autotune":
+                ts = r["_tuner"]
+                extra = (f" converged=e{r['n_entries']}.w{r['ways']}."
+                         f"{r['policy']} switches={ts['switches']} "
+                         f"windows={ts['windows']}")
+            else:
+                extra = (f" issued={r['prefetch_issued']} "
+                         f"useful={r['prefetch_useful']} "
+                         f"late={r['prefetch_late']}")
+            rows.append(
+                f"tlb_sweep.adaptive.{dep}.{label},"
+                f"{r['demand_ptw_cycles']},demand PTW cycles vs best "
+                f"static {b['demand_ptw_cycles']} "
+                f"(ptw_pct_mean={r['ptw_pct_mean']:.2f} vs "
+                f"{b['ptw_pct_mean']:.2f}){extra}")
     return rows
 
 

@@ -7,32 +7,81 @@ recorded events, it never runs the model.
 Trace events (recorded by ``ServingEngine(record_translation_trace=True)``):
 
   ("map",   pages)              Listing-1 host map pass (warms PTE lines)
+  ("map",   pages, slot, row)   extended form: additionally installs the
+                                slot's full logical->physical table into the
+                                replay IOMMU's address space, so a replaying
+                                IOTLB *prefetcher* can resolve upcoming
+                                logical pages the way hardware reads the
+                                page table. Replay numbers WITHOUT a
+                                prefetcher are bit-identical for both forms
+                                (demand accesses carry their physical page
+                                in the trace; the table feeds only the
+                                prefetcher).
   ("step",  accesses, tokens)   one decode step's (slot, lp, phys) gathers
-  ("unmap", slot, n_pages)      release: per-page self-invalidation
+  ("unmap", slot, n_pages)      release: per-ASID self-invalidation (TLB
+                                entries + prefetcher state die with the
+                                slot, mirroring the live engine's detach)
+
+Adaptive replay: construct the IOMMU with a
+:class:`~repro.core.sva.iommu.PrefetchConfig` to replay with IOTLB
+prefetching, and/or pass ``tuner=TLBAutoTuner(iommu, AutoTuneConfig(...))``
+to let the online geometry auto-tuner advance one window per replayed
+decode step — the same machinery the live serving engine runs, priced on a
+recorded trace.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 from repro.configs.paper_soc import PaperSoCConfig
 from repro.core.simulator.platform import H2A
-from repro.core.sva.iommu import IOMMU
+from repro.core.sva.iommu import IOMMU, TLBAutoTuner
+
+
+def _install_row(iommu: IOMMU, slot: int, row) -> None:
+    """Install a slot's logical->physical table into the replay IOMMU
+    (attaching the space on first sight). The TLB is NOT warmed — the
+    recorded demand stream decides what gets cached; only the prefetcher
+    reads the table."""
+    sp = iommu.space(slot)
+    if sp is None:
+        sp = iommu.attach(slot)
+    sp.table.clear()
+    for lp, pp in enumerate(row):
+        sp.table[lp] = pp
 
 
 def replay_trace(trace, iommu: IOMMU, kv_bytes_per_token: int,
                  compute_per_token: float, soc: PaperSoCConfig,
-                 dram_latency: int) -> List[Tuple[float, float]]:
+                 dram_latency: int,
+                 tuner: Optional[TLBAutoTuner] = None
+                 ) -> List[Tuple[float, float]]:
     """Feed a recorded serving translation trace through ``iommu``.
     Returns the per-decode-step list of (ptw_cycles, step_cycles) in
-    accelerator cycles."""
+    accelerator cycles. ``ptw_cycles`` is the DEMAND-exposed translation
+    cost: walk cost on misses plus the exposed latency of late prefetches
+    (prefetch walks that completed in time cost the demand path nothing —
+    their cycles only show in the walk model's totals)."""
     burst = (dram_latency + soc.dram_base_latency) * H2A
     per_step: List[Tuple[float, float]] = []
     for ev in trace:
         if ev[0] == "map":
             iommu.host_map_pass(ev[1])
+            if len(ev) >= 4:
+                _install_row(iommu, ev[2], ev[3])
         elif ev[0] == "unmap":
             _, slot, n_pages = ev
-            iommu.invalidate(pages=[(slot, lp) for lp in range(n_pages)])
+            # Mirror the live engine's release -> detach: a per-ASID
+            # invalidation drops the slot's TLB entries AND the
+            # prefetcher's stream state / in-flight fills, so slot reuse
+            # never inherits a dead sequence's predictor. (For static
+            # replays this removes exactly the keys the recorded per-page
+            # list would — every demand fill has lp < n_pages.)
+            iommu.invalidate(asid=slot)
+            sp = iommu.space(slot)
+            if sp is not None:
+                sp.table.clear()        # released: the prefetcher must not
+                                        # resolve through a dead mapping
         else:
             _, accesses, tokens = ev
             ptw = 0.0
@@ -48,4 +97,6 @@ def replay_trace(trace, iommu: IOMMU, kv_bytes_per_token: int,
             # Double-buffered gather hides compute under DMA (or vice
             # versa); walks serialize in front of their page's burst.
             per_step.append((ptw, max(compute, dma) + ptw))
+            if tuner is not None:
+                tuner.observe_step()
     return per_step

@@ -1,5 +1,7 @@
 """Paged serving example: continuous batching with zero-copy admission,
-copy-on-write prefix sharing, and SVA/TLB statistics.
+copy-on-write prefix sharing, SVA/TLB statistics, and the adaptive
+translation front-end (IOTLB prefetching + online TLB-geometry
+auto-tuning).
 
 Most requests open with the same system prompt, so admission maps the
 already-resident prefix pages (refcount++) and prefills only each prompt's
@@ -7,7 +9,12 @@ suffix; exact-duplicate prompts also share the partial tail page and
 CoW-duplicate it on their first divergent token.
 
   PYTHONPATH=src python examples/serve_paged.py
+  PYTHONPATH=src python examples/serve_paged.py --tlb-prefetch stream \
+      --tlb-autotune 4
 """
+import argparse
+import dataclasses
+
 import jax
 import numpy as np
 
@@ -15,7 +22,40 @@ from repro.configs import get_config, reduce_for_smoke
 from repro.core.serving.engine import ServingEngine
 from repro.models import init_params
 
+ap = argparse.ArgumentParser(
+    description="Paged serving demo over the SVA/IOMMU stack. The serving "
+                "TLB's static geometry comes from ModelConfig.serve_tlb_"
+                "{entries,ways,policy}; the flags below arm the ADAPTIVE "
+                "front-end on top of it.",
+    epilog="Geometry/policy methodology and the static-vs-adaptive "
+           "benchmark contract are documented in benchmarks/README.md "
+           "(see benchmarks/tlb_sweep.py for the full design-space sweep "
+           "and paged_serving.py --translation-report for modeled PTW "
+           "overhead).")
+ap.add_argument("--tlb-prefetch", default="none",
+                choices=("none", "next_page", "stream"),
+                help="IOTLB prefetch policy on the decode gather stream "
+                     "(ModelConfig.serve_tlb_prefetch_policy)")
+ap.add_argument("--tlb-prefetch-degree", type=int, default=2,
+                help="prefetch fills issued per trigger")
+ap.add_argument("--tlb-prefetch-distance", type=int, default=4,
+                help="stream run-ahead distance in pages")
+ap.add_argument("--tlb-autotune", type=int, default=0, metavar="STEPS",
+                help="auto-tune the serving TLB geometry online with this "
+                     "measurement window in decode steps "
+                     "(ModelConfig.serve_tlb_autotune; 0 = off)")
+args = ap.parse_args()
+
 cfg = reduce_for_smoke(get_config("qwen2-7b"))
+cfg = dataclasses.replace(
+    cfg,
+    serve_tlb_prefetch_policy=args.tlb_prefetch,
+    serve_tlb_prefetch_degree=args.tlb_prefetch_degree,
+    serve_tlb_prefetch_distance=args.tlb_prefetch_distance,
+    serve_tlb_autotune=args.tlb_autotune,
+    # Small-TLB demo geometry when auto-tuning, so the ladder has room to
+    # differentiate within a short example run.
+    serve_tlb_entries=64 if args.tlb_autotune else cfg.serve_tlb_entries)
 params = init_params(cfg, jax.random.key(0))
 eng = ServingEngine(cfg, params, n_slots=4, max_len=128, page_size=8,
                     offload_mode="zero_copy",
@@ -44,6 +84,12 @@ print(f"SVA: {s['sva']}")
 print(f"TLB: {s['tlb']}")
 print(f"IOMMU: {s['iommu']}  (unified front-end; the simulator's 4-entry "
       "IOTLB is the same class)")
+if "autotune" in s["iommu"]:
+    at = s["iommu"]["autotune"]
+    print(f"auto-tuner: phase={at['phase']} switches={at['switches']} "
+          f"windows={at['windows']} -> current geometry "
+          f"e{s['iommu']['tlb_entries']}.w{s['iommu']['tlb_ways']}."
+          f"{s['iommu']['tlb_policy']} (explored: {at['explored']})")
 print(f"prefix cache: {s['prefix']}")
 print(f"prefill tokens saved: {s['prefill_tokens_saved']} "
       f"(shared admissions: {s['shared_admissions']}); "

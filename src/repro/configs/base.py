@@ -100,16 +100,29 @@ class ModelConfig:
     decode_backend: str = "jax"
     # Warm prefix-cache tuning (serving): eviction policy of the
     # cross-request PrefixIndex and an optional cap on the pages it may
-    # retain after release (0 = bounded only by pool pressure).
-    prefix_cache_policy: str = "lru"        # lru | lfu
+    # retain after release (0 = bounded only by pool pressure). gdsfs is
+    # the size-aware score (frequency x covered-tokens / page-span).
+    prefix_cache_policy: str = "lru"        # lru | lfu | gdsfs
     prefix_cache_pages: int = 0
     # Serving-side translation front-end geometry: the delta-upload cache
     # the PagedKVManager runs decode page gathers through (same
     # TranslationCache as the simulator's hardware IOTLB; tuned per
-    # deployment via benchmarks/tlb_sweep.py).
+    # deployment via benchmarks/tlb_sweep.py — or ONLINE via
+    # serve_tlb_autotune below).
     serve_tlb_entries: int = 4096
     serve_tlb_ways: int = 0                 # 0 = fully associative
-    serve_tlb_policy: str = "lru"           # lru | fifo | lfu | random
+    serve_tlb_policy: str = "lru"           # lru | fifo | lfu | random | gdsfs
+    # IOTLB prefetching on the decode gather stream (Kurth et al.,
+    # MMU-aware DMA prefetch): none | next_page | stream, with the issue
+    # degree and the stream run-ahead distance. Defaults off.
+    serve_tlb_prefetch_policy: str = "none"  # none | next_page | stream
+    serve_tlb_prefetch_degree: int = 2
+    serve_tlb_prefetch_distance: int = 4
+    # Online TLB-geometry auto-tuning: measurement-window length in decode
+    # steps (0 = off). Candidates are (entries, ways, policy) triples; an
+    # empty tuple uses a default entries ladder around serve_tlb_entries.
+    serve_tlb_autotune: int = 0
+    serve_tlb_autotune_candidates: Tuple[Tuple[int, int, str], ...] = ()
 
     def __post_init__(self):
         if self.d_head == 0:
@@ -118,18 +131,43 @@ class ModelConfig:
             raise ValueError(
                 f"{self.name}: decode_backend={self.decode_backend!r} "
                 "(expected 'jax' or 'pallas')")
-        if self.prefix_cache_policy not in ("lru", "lfu"):
+        if self.prefix_cache_policy not in ("lru", "lfu", "gdsfs"):
             raise ValueError(
                 f"{self.name}: prefix_cache_policy="
-                f"{self.prefix_cache_policy!r} (expected 'lru' or 'lfu')")
+                f"{self.prefix_cache_policy!r} "
+                "(expected 'lru', 'lfu' or 'gdsfs')")
         if self.prefix_cache_pages < 0:
             raise ValueError(
                 f"{self.name}: prefix_cache_pages={self.prefix_cache_pages} "
                 "(must be >= 0; 0 = uncapped)")
-        if self.serve_tlb_policy not in ("lru", "fifo", "lfu", "random"):
+        if self.serve_tlb_policy not in ("lru", "fifo", "lfu", "random",
+                                         "gdsfs"):
             raise ValueError(
                 f"{self.name}: serve_tlb_policy={self.serve_tlb_policy!r} "
-                "(expected lru | fifo | lfu | random)")
+                "(expected lru | fifo | lfu | random | gdsfs)")
+        if self.serve_tlb_prefetch_policy not in ("none", "next_page",
+                                                  "stream"):
+            raise ValueError(
+                f"{self.name}: serve_tlb_prefetch_policy="
+                f"{self.serve_tlb_prefetch_policy!r} "
+                "(expected none | next_page | stream)")
+        if self.serve_tlb_prefetch_degree < 1:
+            raise ValueError(
+                f"{self.name}: serve_tlb_prefetch_degree="
+                f"{self.serve_tlb_prefetch_degree} (need >= 1)")
+        if self.serve_tlb_prefetch_distance < 1:
+            raise ValueError(
+                f"{self.name}: serve_tlb_prefetch_distance="
+                f"{self.serve_tlb_prefetch_distance} (need >= 1)")
+        if self.serve_tlb_autotune < 0:
+            raise ValueError(
+                f"{self.name}: serve_tlb_autotune={self.serve_tlb_autotune} "
+                "(window length in decode steps; 0 = off)")
+        for cand in self.serve_tlb_autotune_candidates:
+            if len(cand) != 3:
+                raise ValueError(
+                    f"{self.name}: serve_tlb_autotune_candidates entries "
+                    f"are (entries, ways, policy) triples; got {cand!r}")
         if self.serve_tlb_entries < 1:
             raise ValueError(
                 f"{self.name}: serve_tlb_entries={self.serve_tlb_entries} "

@@ -38,6 +38,15 @@ The decode hot path can run through the Pallas scalar-prefetch kernel
 TPU): the per-slot block tables live in SMEM and drive the KV page DMAs,
 so gathering through *shared* block tables costs the same as private ones.
 
+Adaptive translation front-end (``ModelConfig.serve_tlb_prefetch_*`` /
+``serve_tlb_autotune*``; both default-off): the engine arms the manager's
+IOMMU with an IOTLB prefetcher and/or attaches the online geometry
+auto-tuner. Auto-tuning implies running ``translate_step`` every decode
+step (the tuner's only signal is live traffic); each geometry switch is a
+flush + epoch bump, which this engine absorbs as one full table upload —
+decode outputs are unaffected (placement-invariance, pinned by
+``tests/test_adaptive_tlb.py``).
+
 CPU-testable with reduced configs; the same engine drives TPU meshes by
 passing a MeshInfo.
 """
@@ -54,6 +63,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.sva.iommu import (AutoTuneConfig, PrefetchConfig, TLBConfig,
+                                  default_autotune_candidates)
 from repro.core.sva.kv_manager import PagedKVManager
 from repro.models import (MeshInfo, NO_MESH, forward_decode, forward_prefill,
                           init_cache)
@@ -242,6 +253,22 @@ class ServingEngine:
         self._can_share = (offload_mode == "zero_copy" and prefix_sharing
                            and not cfg.is_encdec and not cfg.n_image_tokens
                            and all(k in share_kinds for k in cfg.layer_kinds()))
+        # Adaptive translation front-end (both default-off): IOTLB
+        # prefetching on the decode gather stream, and online geometry
+        # auto-tuning driven by the live hit-rate signal (which requires
+        # translate_step to run — see _translation_stats below).
+        prefetch = PrefetchConfig(cfg.serve_tlb_prefetch_policy,
+                                  degree=cfg.serve_tlb_prefetch_degree,
+                                  distance=cfg.serve_tlb_prefetch_distance)
+        autotune = None
+        if cfg.serve_tlb_autotune:
+            base_tlb = TLBConfig(cfg.serve_tlb_entries, cfg.serve_tlb_policy,
+                                 ways=cfg.serve_tlb_ways)
+            cands = tuple(TLBConfig(e, p, ways=w) for e, w, p
+                          in cfg.serve_tlb_autotune_candidates) \
+                or default_autotune_candidates(base_tlb)
+            autotune = AutoTuneConfig(interval_steps=cfg.serve_tlb_autotune,
+                                      candidates=cands)
         self.mgr = PagedKVManager(n_slots, self.max_pages, page_size,
                                   kv_bytes_per_token=kv_bytes,
                                   offload_mode=offload_mode,
@@ -250,7 +277,9 @@ class ServingEngine:
                                   prefix_cap_pages=cfg.prefix_cache_pages,
                                   tlb_entries=cfg.serve_tlb_entries,
                                   tlb_policy=cfg.serve_tlb_policy,
-                                  tlb_ways=cfg.serve_tlb_ways)
+                                  tlb_ways=cfg.serve_tlb_ways,
+                                  tlb_prefetch=prefetch,
+                                  autotune=autotune)
         # Translation trace: ("map", fresh_pages) at admission (Listing-1
         # host map pass) and ("step", accesses, tokens_read) per decode step
         # — replayable through any IOMMU walk model (see
@@ -261,7 +290,14 @@ class ServingEngine:
         # implied by tracing; the default hot path pays nothing.
         self.translation_trace: Optional[List[tuple]] = \
             [] if record_translation_trace else None
-        self._translation_stats = translation_stats or record_translation_trace
+        # The auto-tuner's only signal — and the prefetcher's only trigger —
+        # is the live IOMMU demand traffic, so arming either implies
+        # running translate_step each decode step (otherwise the knob
+        # would be a silent no-op).
+        self._translation_stats = (translation_stats
+                                   or record_translation_trace
+                                   or autotune is not None
+                                   or prefetch.enabled)
         self.queue: deque = deque()
         self.active: Dict[int, Request] = {}
         self._next_id = 0
@@ -370,9 +406,15 @@ class ServingEngine:
                 continue
             if self.translation_trace is not None:
                 # Listing-1 map pass over the freshly allocated pages
-                # (shared prefix pages were mapped by their provider).
+                # (shared prefix pages were mapped by their provider). The
+                # extended fields — slot + the row's full logical->physical
+                # table — let a replaying prefetcher resolve upcoming pages
+                # the way the hardware reads the page table; replays of the
+                # short ("map", pages) form stay supported (and replay
+                # numbers without prefetching are identical either way).
                 self.translation_trace.append(
-                    ("map", list(st.pages[st.shared_pages:])))
+                    ("map", list(st.pages[st.shared_pages:]),
+                     st.slot, list(st.pages)))
             admitted.append((req, st))
         if not admitted:
             return

@@ -27,7 +27,8 @@ from typing import Iterable, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.paper_soc import PaperSoCConfig
-from repro.core.sva.iommu import IOMMU, Sv39Walk, TLBConfig, WalkCacheConfig
+from repro.core.sva.iommu import (IOMMU, PrefetchConfig, Sv39Walk, TLBConfig,
+                                  WalkCacheConfig)
 
 H2A = 20.0 / 50.0     # host-domain cycles -> accelerator cycles
 
@@ -47,6 +48,13 @@ class SimConfig:
     walk_cache_entries: int = 0       # non-leaf PTE walk cache (0 = off)
     walk_cache_ways: int = 0          # walk-cache associativity (0 = fully)
     walk_cache_policy: str = "lru"    # walk-cache replacement
+    # IOTLB prefetching (Kurth et al. MMU-aware DMA engine): walks issued
+    # ahead of the demand stream. "none" (default) is bit-identical to the
+    # prefetch-less platform; a demand access that arrives while its
+    # prefetch is in flight still pays the full walk cost (late prefetch).
+    iotlb_prefetch_policy: str = "none"   # none | next_page | stream
+    iotlb_prefetch_degree: int = 2
+    iotlb_prefetch_distance: int = 4
     seed: int = 0
 
 
@@ -108,7 +116,10 @@ class MemorySystem:
                                            cfg.walk_cache_policy,
                                            seed=cfg.seed)),
             tlb=TLBConfig(self.soc.iotlb_entries, cfg.iotlb_policy,
-                          seed=cfg.seed, ways=cfg.iotlb_ways))
+                          seed=cfg.seed, ways=cfg.iotlb_ways),
+            prefetch=PrefetchConfig(cfg.iotlb_prefetch_policy,
+                                    degree=cfg.iotlb_prefetch_degree,
+                                    distance=cfg.iotlb_prefetch_distance))
 
     @property
     def iotlb(self):
@@ -167,6 +178,10 @@ def run_kernel(tiles: List[Tile], cfg: SimConfig,
                     hits += w
                 else:
                     walks += w
+                # A hit's cost is 0 unless the IOTLB prefetcher is on and
+                # the prefetch was LATE (walk still in flight): that
+                # exposed latency is charged like a demand walk's.
+                if c:
                     ptw_cycles += c * w
                     d_async += c * w * tile.ptw_hidden_frac
                     d_sync += c * w * (1.0 - tile.ptw_hidden_frac)

@@ -19,7 +19,10 @@ def make_sim_config(config: str, dram_latency: int,
                     host_interference: float = 0.0,
                     iotlb_policy: str = "lru", iotlb_ways: int = 0,
                     walk_cache_entries: int = 0, walk_cache_ways: int = 0,
-                    walk_cache_policy: str = "lru") -> SimConfig:
+                    walk_cache_policy: str = "lru",
+                    iotlb_prefetch_policy: str = "none",
+                    iotlb_prefetch_degree: int = 2,
+                    iotlb_prefetch_distance: int = 4) -> SimConfig:
     soc = soc or PaperSoCConfig()
     return SimConfig(soc=soc, dram_latency=dram_latency,
                      iommu=config in ("iommu", "iommu_llc"),
@@ -28,7 +31,10 @@ def make_sim_config(config: str, dram_latency: int,
                      iotlb_policy=iotlb_policy, iotlb_ways=iotlb_ways,
                      walk_cache_entries=walk_cache_entries,
                      walk_cache_ways=walk_cache_ways,
-                     walk_cache_policy=walk_cache_policy)
+                     walk_cache_policy=walk_cache_policy,
+                     iotlb_prefetch_policy=iotlb_prefetch_policy,
+                     iotlb_prefetch_degree=iotlb_prefetch_degree,
+                     iotlb_prefetch_distance=iotlb_prefetch_distance)
 
 
 def simulate_kernel(kernel: str, config: str, dram_latency: int,
@@ -36,14 +42,20 @@ def simulate_kernel(kernel: str, config: str, dram_latency: int,
                     host_interference: float = 0.0,
                     iotlb_policy: str = "lru", iotlb_ways: int = 0,
                     walk_cache_entries: int = 0, walk_cache_ways: int = 0,
-                    walk_cache_policy: str = "lru") -> KernelResult:
+                    walk_cache_policy: str = "lru",
+                    iotlb_prefetch_policy: str = "none",
+                    iotlb_prefetch_degree: int = 2,
+                    iotlb_prefetch_distance: int = 4) -> KernelResult:
     tiles = schedule(kernel, params)
     cfg = make_sim_config(config, dram_latency,
                           host_interference=host_interference,
                           iotlb_policy=iotlb_policy, iotlb_ways=iotlb_ways,
                           walk_cache_entries=walk_cache_entries,
                           walk_cache_ways=walk_cache_ways,
-                          walk_cache_policy=walk_cache_policy)
+                          walk_cache_policy=walk_cache_policy,
+                          iotlb_prefetch_policy=iotlb_prefetch_policy,
+                          iotlb_prefetch_degree=iotlb_prefetch_degree,
+                          iotlb_prefetch_distance=iotlb_prefetch_distance)
     return run_kernel(tiles, cfg)
 
 

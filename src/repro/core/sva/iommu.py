@@ -20,19 +20,47 @@ implementation; everything else is a client:
 Design-space axes (Kim et al., "Address Translation Design Tradeoffs for
 Heterogeneous Systems"): TLB size, set associativity, and replacement
 policy (``TLBConfig(n_entries, policy, ways=...)`` — lru | fifo | lfu |
-random, ways=0 fully associative), walker cost model (``WalkModel``), and
-the walker's non-leaf PTE walk cache (``WalkCacheConfig``) are
-independently pluggable, so the same traffic can be priced as pure stats
-(``CountingWalk``) or as modeled Sv39 cycles with/without the shared LLC
-and with/without a hardware walk cache (``Sv39Walk``).
-``benchmarks/tlb_sweep.py`` sweeps these axes over recorded serving
-traces.
+random | gdsfs, ways=0 fully associative), walker cost model
+(``WalkModel``), and the walker's non-leaf PTE walk cache
+(``WalkCacheConfig``) are independently pluggable, so the same traffic can
+be priced as pure stats (``CountingWalk``) or as modeled Sv39 cycles
+with/without the shared LLC and with/without a hardware walk cache
+(``Sv39Walk``). ``benchmarks/tlb_sweep.py`` sweeps these axes over
+recorded serving traces.
+
+Adaptive front-end (this is where the design space stops being static):
+
+  * ``PrefetchConfig(policy="none|next_page|stream", degree, distance)``
+    arms an IOTLB prefetcher modeled after Kurth et al.'s MMU-aware DMA
+    engine: demand traffic predicts upcoming logical pages and issues
+    walk-model fills for them off the demand path. Prefetched fills
+    *complete* at the next demand translate — a demand that arrives while
+    its prefetch is still in flight is a *late* prefetch and pays the full
+    walk cost (conservative: no partial-latency credit). A prefetch NEVER
+    fabricates a translation: for an attached address space only pages
+    present in its table are prefetched (holes are skipped cleanly);
+    unattached ASIDs prefetch identity, exactly like demand translation.
+    Counters (``prefetch_issued/useful/late``) live in ``TLBStats``.
+  * ``AutoTuneConfig(interval_steps, candidates)`` + :class:`TLBAutoTuner`
+    retune the TLB geometry online: every ``interval_steps`` decode steps
+    the tuner reads the live hit-rate/conflict-miss window, explores each
+    candidate geometry for one window, then exploits the best (re-exploring
+    when the exploit hit rate sags). A switch is a real hardware resize:
+    :meth:`IOMMU.reconfigure_tlb` flushes every translation and bumps the
+    epoch (the next serving table upload must be full); cumulative stats
+    carry across so the ``tlb:`` schema stays monotonic.
+
+Stats schema (``IOMMU.stats()``; see ARCHITECTURE.md): ``tlb:``
+(``TLBStats.as_dict``), ``walk:`` (model name, walks, cycles, plus
+``walk_cache:`` and ``prefetch:`` blocks when configured), ``epoch``,
+``asids``.
 
 No module outside this one constructs a raw
 :class:`~repro.core.sva.tlb.TranslationCache`.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import (Dict, Iterable, List, Optional, Protocol, Sequence,
                     Tuple, runtime_checkable)
@@ -101,6 +129,90 @@ class WalkCacheConfig:
                 raise ValueError(
                     f"ways={self.ways} must divide n_entries="
                     f"{self.n_entries} (0 = fully associative)")
+
+
+PREFETCH_POLICIES = ("none", "next_page", "stream")
+
+#: accesses in a row with stride +1 before the stream prefetcher engages
+STREAM_THRESHOLD = 2
+
+
+@dataclass(frozen=True)
+class PrefetchConfig:
+    """IOTLB prefetcher knobs (Kurth et al., MMU-aware DMA prefetching).
+
+    ``none``       disabled — bit-identical to the pre-prefetch front-end.
+    ``next_page``  on a demand MISS at logical page p, issue fills for
+                   ``p+1 .. p+degree`` (the classic next-line prefetch).
+    ``stream``     per-ASID +1-stride detector: once ``STREAM_THRESHOLD``
+                   sequential accesses are seen, keep a run-ahead window of
+                   ``distance`` pages beyond the demand page, issuing at
+                   most ``degree`` fills per access (hits trigger too, so
+                   the prefetcher runs ahead of a streaming DMA instead of
+                   reacting to its misses).
+
+    ``degree`` bounds fills per trigger; ``distance`` how far past the
+    demand page the stream window reaches (only ``stream`` uses it)."""
+    policy: str = "none"
+    degree: int = 2
+    distance: int = 4
+
+    def __post_init__(self):
+        if self.policy not in PREFETCH_POLICIES:
+            raise ValueError(f"policy={self.policy!r} "
+                             f"(expected one of {PREFETCH_POLICIES})")
+        if self.degree < 1:
+            raise ValueError(f"degree={self.degree} (need >= 1)")
+        if self.distance < 1:
+            raise ValueError(f"distance={self.distance} (need >= 1)")
+
+    @property
+    def enabled(self) -> bool:
+        return self.policy != "none"
+
+
+@dataclass(frozen=True)
+class AutoTuneConfig:
+    """Online TLB-geometry auto-tuner knobs.
+
+    Every ``interval_steps`` observed decode steps the tuner closes a
+    measurement window over the live TLB stats (hit-rate delta, conflict
+    misses). It explores each candidate geometry for one window, then
+    settles on the best (highest window hit rate; ties prefer fewer
+    conflict misses, then fewer entries, then earlier candidates) and
+    re-explores when the exploit
+    window's hit rate drops more than ``retune_margin`` below the best
+    explored value. Windows with fewer than ``min_accesses`` demand
+    accesses are ignored (idle engine)."""
+    interval_steps: int = 32
+    candidates: Tuple[TLBConfig, ...] = ()
+    min_accesses: int = 1
+    retune_margin: float = 0.05
+
+    def __post_init__(self):
+        if self.interval_steps < 1:
+            raise ValueError(
+                f"interval_steps={self.interval_steps} (need >= 1)")
+        if not self.candidates:
+            raise ValueError("candidates must name at least one TLBConfig")
+        if self.min_accesses < 1:
+            raise ValueError(f"min_accesses={self.min_accesses} (need >= 1)")
+        if not 0.0 <= self.retune_margin <= 1.0:
+            raise ValueError(
+                f"retune_margin={self.retune_margin} (need 0..1)")
+
+
+def default_autotune_candidates(base: TLBConfig) -> Tuple[TLBConfig, ...]:
+    """A small entries ladder around ``base`` (same ways/policy): the
+    default candidate set when a deployment turns auto-tuning on without
+    naming geometries."""
+    entries = sorted({max(4, base.n_entries // 16),
+                      max(4, base.n_entries // 4), base.n_entries})
+    out = []
+    for e in entries:
+        ways = base.ways if base.ways and e % base.ways == 0 else 0
+        out.append(TLBConfig(e, base.policy, seed=base.seed, ways=ways))
+    return tuple(out)
 
 
 @dataclass
@@ -292,9 +404,13 @@ class IOAddressSpace:
 
     def remap(self, lp: int, pp: int) -> None:
         """Point one logical page at a new physical page (CoW divergence):
-        the stale translation self-invalidates, the new one is warmed."""
+        the stale translation self-invalidates, the new one is warmed.
+        Routed through the IOMMU's page invalidation so an IN-FLIGHT
+        prefetch of the old translation dies too — otherwise its delayed
+        install would overwrite the fresh post-CoW fill with the stale
+        physical page."""
         self.table[lp] = pp
-        self.iommu.tlb.invalidate_key((self.asid, lp))
+        self.iommu.invalidate(pages=[(self.asid, lp)])
         self.iommu.tlb.fill((self.asid, lp), pp, walked=False)
         self.iommu.host_map_pass([pp])
 
@@ -330,14 +446,25 @@ class IOAddressSpace:
 
 class IOMMU:
     """The translation front-end: one shared IOTLB + one walk cost model,
-    many attached address spaces (ASIDs)."""
+    many attached address spaces (ASIDs), and an optional IOTLB prefetcher
+    (``PrefetchConfig`` — see the module docstring for the timing model)."""
 
     def __init__(self, walk_model: Optional[WalkModel] = None,
-                 tlb: TLBConfig = TLBConfig()):
+                 tlb: TLBConfig = TLBConfig(),
+                 prefetch: PrefetchConfig = PrefetchConfig()):
         self.walk_model: WalkModel = walk_model or CountingWalk()
         self.tlb_config = tlb
         self.tlb = TranslationCache(tlb.n_entries, policy=tlb.policy,
                                     seed=tlb.seed, ways=tlb.ways)
+        self.prefetch_config = prefetch
+        # Prefetcher state: fills issued but not yet completed (they install
+        # at the START of the next demand translate — arriving demand for a
+        # pending key is a LATE prefetch), installed-but-never-demanded keys
+        # (for useful-once accounting), and the per-ASID stream detector
+        # [last_lp, run_length, next_unprefetched_lp].
+        self._pending: "OrderedDict" = OrderedDict()
+        self._prefetched: set = set()
+        self._streams: Dict[int, List[int]] = {}
         self.epoch = 0
         self._spaces: Dict[int, IOAddressSpace] = {}
 
@@ -363,6 +490,10 @@ class IOMMU:
             self.invalidate(asid=asid)           # full scan, rare
         else:
             self.invalidate(pages=[(asid, lp) for lp in sp.table])
+            # predictor state and any in-flight prefetch die with the space
+            for key in [k for k in self._pending if k[0] == asid]:
+                del self._pending[key]
+            self._streams.pop(asid, None)
         sp.table.clear()
 
     def space(self, asid: int) -> Optional[IOAddressSpace]:
@@ -386,15 +517,37 @@ class IOMMU:
         ids without building tables; for an ATTACHED space a missing table
         entry is a caller error (a walk of a hole would cache a bogus
         translation in the shared TLB) and raises.
+
+        With prefetching on, a demand hit can carry a nonzero cost: a LATE
+        prefetch (the fill was issued by the immediately preceding demand
+        access and its walk is still in flight) charges the full stored
+        walk cost — conservative, no partial-latency credit — while a
+        timely prefetched hit costs 0 like any other hit.
         """
-        val, hit = self.tlb.lookup((asid, page))
+        pf = self.prefetch_config.enabled
+        key = (asid, page)
+        late_cost = 0.0
+        if pf and self._pending:
+            late_cost = self._install_pending(key)
+        val, hit = self.tlb.lookup(key)
         if hit and phys is not None and val != phys:
             self.tlb.stats.hits -= 1             # stale: account as a miss
             self.tlb.stats.misses += 1
-            self.tlb.invalidate_key((asid, page))
+            self.tlb.invalidate_key(key)
+            self._prefetched.discard(key)
             hit = False
+            late_cost = 0.0
         if hit:
-            return val, 0.0, True
+            if key in self._prefetched:
+                self._prefetched.discard(key)
+                self.tlb.stats.prefetch_useful += 1
+                if late_cost:
+                    self.tlb.stats.prefetch_late += 1
+            else:
+                late_cost = 0.0                  # entry predates the flush
+            if pf:
+                self._note_access(asid, page, miss=False)
+            return val, late_cost, True
         sp = self._spaces.get(asid)
         if phys is None:
             if sp is not None:
@@ -405,10 +558,74 @@ class IOMMU:
             else:
                 phys = page
         cost = self.walk_model.walk(asid, phys, vpn=page)
-        self.tlb.fill((asid, page), phys)
+        self.tlb.fill(key, phys, cost=cost)
+        self._prefetched.discard(key)   # prefetched once, evicted before use
         if sp is not None and page not in sp.table:
             sp._untracked_fills = True
+        if pf:
+            self._note_access(asid, page, miss=True)
         return phys, cost, False
+
+    # ---------------------------------------------------------- prefetcher
+    def _install_pending(self, demand_key: Tuple[int, int]) -> float:
+        """Complete every in-flight prefetch (they finish at the start of
+        the next demand translate). Returns the stored walk cost when the
+        demanded key itself was still in flight (a LATE prefetch — the
+        demand exposes that walk's latency), else 0."""
+        late = 0.0
+        for key, (pp, cost) in self._pending.items():
+            if key == demand_key:
+                late = cost
+            self.tlb.fill(key, pp, walked=False, cost=cost)
+            self._prefetched.add(key)
+        self._pending.clear()
+        if len(self._prefetched) > 4 * self.tlb.n_entries:
+            # evicted-before-use keys accumulate; prune lazily
+            self._prefetched = {k for k in self._prefetched if k in self.tlb}
+        return late
+
+    def _note_access(self, asid: int, page: int, miss: bool) -> None:
+        """Feed the prefetch predictor one demand access and issue fills."""
+        cfg = self.prefetch_config
+        if cfg.policy == "next_page":
+            if miss:
+                self._issue(asid, range(page + 1, page + 1 + cfg.degree))
+            return
+        st = self._streams.get(asid)               # stream
+        if st is None or page != st[0] + 1:
+            self._streams[asid] = [page, 1, page + 1]
+            return
+        st[0] = page
+        st[1] += 1
+        if st[1] < STREAM_THRESHOLD:
+            return
+        start = max(st[2], page + 1)
+        end = min(page + cfg.distance, start + cfg.degree - 1)
+        if start <= end:
+            self._issue(asid, range(start, end + 1))
+            st[2] = end + 1
+
+    def _issue(self, asid: int, pages: Iterable[int]) -> None:
+        """Issue walk-model fills for predicted logical pages. NEVER
+        fabricates a translation: attached spaces only prefetch pages
+        present in their table (holes are skipped cleanly); unattached
+        ASIDs prefetch identity, matching their demand behavior."""
+        sp = self._spaces.get(asid)
+        for lp in pages:
+            if lp < 0:
+                continue
+            key = (asid, lp)
+            if key in self.tlb or key in self._pending:
+                continue
+            if sp is not None:
+                pp = sp.table.get(lp)
+                if pp is None:
+                    continue                     # unmapped: skip, don't walk
+            else:
+                pp = lp
+            cost = self.walk_model.walk(asid, pp, vpn=lp)
+            self._pending[key] = (pp, cost)
+            self.tlb.stats.prefetch_issued += 1
 
     def host_map_pass(self, pages: Iterable[int]) -> None:
         """Paper Listing 1: the host maps right before offload; the walk
@@ -429,13 +646,44 @@ class IOMMU:
         if pages is not None:
             for key in pages:
                 self.tlb.invalidate_key(key)
+                self._pending.pop(key, None)
+                self._prefetched.discard(key)
             return
         if asid is not None:
             for key in self.tlb.keys():
                 if key[0] == asid:
                     self.tlb.invalidate_key(key)
+            for key in [k for k in self._pending if k[0] == asid]:
+                del self._pending[key]
+            self._prefetched = {k for k in self._prefetched
+                                if k[0] != asid}
+            self._streams.pop(asid, None)
             return
         self.tlb.invalidate()
+        self._pending.clear()
+        self._prefetched.clear()
+        self._streams.clear()
+        self.epoch += 1
+
+    def reconfigure_tlb(self, tlb: TLBConfig) -> None:
+        """Online geometry switch (the auto-tuner's resize): swap in a
+        fresh TranslationCache with the new geometry. A resize is a real
+        hardware flush — every translation dies, in-flight prefetches are
+        dropped, and the epoch bumps exactly once (the next serving table
+        upload must be full). Cumulative stats carry over so the ``tlb:``
+        schema stays monotonic across switches; the flush is counted as an
+        invalidation like any other full flush."""
+        if tlb == self.tlb_config:
+            return
+        stats = self.tlb.stats
+        self.tlb_config = tlb
+        self.tlb = TranslationCache(tlb.n_entries, policy=tlb.policy,
+                                    seed=tlb.seed, ways=tlb.ways)
+        self.tlb.stats = stats
+        self.tlb.stats.invalidations += 1
+        self._pending.clear()
+        self._prefetched.clear()
+        self._streams.clear()
         self.epoch += 1
 
     # --------------------------------------------------------------- stats
@@ -458,11 +706,142 @@ class IOMMU:
             walk["walk_cache"] = dict(
                 hits=wcs.hits, misses=wcs.misses, evictions=wcs.evictions,
                 n_entries=wc.n_entries, ways=wc.ways)
+        if self.prefetch_config.enabled:
+            ts = self.tlb.stats
+            walk["prefetch"] = dict(
+                policy=self.prefetch_config.policy,
+                degree=self.prefetch_config.degree,
+                distance=self.prefetch_config.distance,
+                issued=ts.prefetch_issued, useful=ts.prefetch_useful,
+                late=ts.prefetch_late)
         return {"tlb": self.tlb.stats.as_dict(),
                 "walk": walk,
                 "epoch": self.epoch,
                 "asids": self.n_spaces}
 
 
-__all__ = ["CountingWalk", "IOAddressSpace", "IOMMU", "Sv39Walk",
-           "TLBConfig", "WalkCacheConfig", "WalkModel", "WalkStats"]
+class TLBAutoTuner:
+    """Online geometry auto-tuner over an :class:`IOMMU`'s TLB.
+
+    Drive it with :meth:`observe_step` once per decode step (the
+    ``PagedKVManager`` does this from ``translate_step``; trace replay does
+    it per ``step`` event). Deterministic: the same access stream through
+    the same config reproduces the same switch sequence.
+
+    Phases: ``explore`` measures each candidate geometry for one window
+    (the current geometry is measured first when it is a candidate),
+    ``exploit`` stays on the best explored geometry and re-enters explore
+    when its live hit rate drops ``retune_margin`` below the best explored
+    value (workload shift). Every switch goes through
+    :meth:`IOMMU.reconfigure_tlb` — flush + epoch bump."""
+
+    def __init__(self, iommu: IOMMU, config: AutoTuneConfig):
+        self.iommu = iommu
+        self.config = config
+        self.candidates: Tuple[TLBConfig, ...] = config.candidates
+        # Measure the installed geometry first when it's a candidate (no
+        # gratuitous flush at engine start).
+        try:
+            self._idx = self.candidates.index(iommu.tlb_config)
+        except ValueError:
+            self._idx = 0
+            iommu.reconfigure_tlb(self.candidates[0])
+        self._explored: Dict[int, float] = {}
+        self._phase = "explore"
+        self._steps = 0
+        self._warmup = True        # discard the first window after a switch
+        self.windows = 0
+        self.switches = 0
+        self.best_idx: Optional[int] = None
+        self._snap = self._snapshot()
+
+    def _snapshot(self) -> Tuple[int, int, int]:
+        s = self.iommu.tlb.stats
+        return s.hits, s.misses, s.conflict_misses
+
+    def _window_stats(self) -> Tuple[float, int, int]:
+        """(hit rate, conflict misses, demand accesses) over the window
+        since the last snapshot — the live signal the tuner watches."""
+        h0, m0, c0 = self._snap
+        s = self.iommu.tlb.stats
+        dh, dm = s.hits - h0, s.misses - m0
+        total = dh + dm
+        return ((dh / total if total else 0.0),
+                s.conflict_misses - c0, total)
+
+    def _switch_to(self, idx: int) -> None:
+        if self.candidates[idx] != self.iommu.tlb_config:
+            self.iommu.reconfigure_tlb(self.candidates[idx])
+            self.switches += 1
+            self._warmup = True     # post-flush window is cold: don't score
+        self._idx = idx
+
+    def observe_step(self) -> None:
+        """Count one decode step; close a measurement window every
+        ``interval_steps`` and explore/exploit accordingly."""
+        self._steps += 1
+        if self._steps % self.config.interval_steps:
+            return
+        rate, conflicts, accesses = self._window_stats()
+        self._snap = self._snapshot()
+        if accesses < self.config.min_accesses:
+            return                              # idle window: no signal
+        if self._warmup:
+            # The window right after a geometry switch (or engine start)
+            # measures compulsory refills, not the geometry — skip it so a
+            # candidate is never condemned for the flush it began with.
+            self._warmup = False
+            return
+        self.windows += 1
+        if self._phase == "explore":
+            self._explored[self._idx] = (rate, conflicts)
+            nxt = next((i for i in range(len(self.candidates))
+                        if i not in self._explored), None)
+            if nxt is not None:
+                self._switch_to(nxt)
+                return
+            # every candidate measured: exploit the best window hit rate;
+            # ties break on fewer conflict misses (a set-constrained
+            # geometry losing to associativity at equal rate), then fewer
+            # entries, then candidate order
+            self.best_idx = min(
+                self._explored,
+                key=lambda i: (-self._explored[i][0], self._explored[i][1],
+                               self.candidates[i].n_entries, i))
+            self._phase = "exploit"
+            self._switch_to(self.best_idx)
+            return
+        best_rate = self._explored.get(self.best_idx, (0.0, 0))[0]
+        if rate < best_rate - self.config.retune_margin:
+            # workload shifted under us: measurements are stale, re-explore
+            # (starting from the currently installed geometry — no flush)
+            self._explored = {}
+            self._phase = "explore"
+
+    @property
+    def converged(self) -> bool:
+        return self._phase == "exploit"
+
+    def stats(self) -> dict:
+        """The ``autotune:`` stats block (see ARCHITECTURE.md)."""
+        cur = self.iommu.tlb_config
+        return dict(
+            phase=self._phase, windows=self.windows, switches=self.switches,
+            interval_steps=self.config.interval_steps,
+            n_candidates=len(self.candidates),
+            current=dict(n_entries=cur.n_entries, ways=cur.resolved_ways,
+                         policy=cur.policy),
+            explored={self._label(self.candidates[i]):
+                      dict(hit_rate=round(r, 4), conflict_misses=c)
+                      for i, (r, c) in sorted(self._explored.items())})
+
+    @staticmethod
+    def _label(c: TLBConfig) -> str:
+        w = "full" if c.resolved_ways == c.n_entries else str(c.ways)
+        return f"e{c.n_entries}.w{w}.{c.policy}"
+
+
+__all__ = ["AutoTuneConfig", "CountingWalk", "IOAddressSpace", "IOMMU",
+           "PrefetchConfig", "Sv39Walk", "TLBAutoTuner", "TLBConfig",
+           "WalkCacheConfig", "WalkModel", "WalkStats",
+           "default_autotune_candidates"]

@@ -42,6 +42,24 @@ drained with ``delta_rows()`` — the serving-level analogue of a warm IOTLB.
 ``invalidate_epoch()`` models the paper's Listing-1 flush: every
 translation dies (the IOMMU epoch bumps exactly once) and the next upload
 must be a full-table upload.
+
+Adaptive front-end hooks (both default-off):
+
+  * ``tlb_prefetch=PrefetchConfig(...)`` arms the IOMMU's IOTLB prefetcher
+    on the decode gather stream (Kurth-et-al. MMU-aware DMA prefetch);
+  * ``autotune=AutoTuneConfig(...)`` attaches a :class:`TLBAutoTuner` that
+    ``translate_step`` advances once per decode step — the serving TLB
+    geometry then follows the live hit-rate/conflict-miss signal instead
+    of a static per-deployment pick from ``benchmarks/tlb_sweep.py``
+    (a switch = flush + epoch bump, so the engine's next table upload is
+    full).
+
+Stats schema (``stats()``; see ARCHITECTURE.md): ``sva:`` host-side mode
+counters (disjoint zero-copy vs staging), ``tlb:`` the IOMMU's TLBStats
+dict, ``iommu:`` {walk, epoch, asids, tlb_entries, tlb_ways, tlb_policy,
+autotune: when tuning}, ``pool_*`` page-pool gauges, ``prefix:`` the
+PrefixIndex block (hits/misses/pages_shared/tokens_saved/evictions/
+steals/cached_pages/policy/max_pages) when sharing is on.
 """
 from __future__ import annotations
 
@@ -50,7 +68,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.sva.iommu import IOMMU, CountingWalk, TLBConfig
+from repro.core.sva.iommu import (IOMMU, AutoTuneConfig, CountingWalk,
+                                  PrefetchConfig, TLBAutoTuner, TLBConfig)
 from repro.core.sva.mapping import SVAStats
 from repro.core.sva.page_pool import OutOfPages, PagePool
 
@@ -111,19 +130,24 @@ class PrefixStats:
                     evictions=self.evictions, steals=self.steals)
 
 
-PREFIX_POLICIES = ("lru", "lfu")
+PREFIX_POLICIES = ("lru", "lfu", "gdsfs")
 
 
 class PrefixIndex:
     """Longest-shared-prefix lookup over admitted prompts, token-hash per
     full page (plus one cached partial tail page per prompt).
 
-    Eviction under page pressure is policy-pluggable (``lru`` recency /
-    ``lfu`` frequency — frequency keeps a popular system prompt resident
-    even when a burst of one-off prompts churns the pool), and
-    ``max_pages`` caps the warm cache's footprint: after every admission
-    the index sheds entries it solely owns until it fits (live sequences'
-    pages never count against eviction — freeing them returns nothing)."""
+    Eviction under page pressure is policy-pluggable — ``lru`` recency,
+    ``lfu`` frequency (keeps a popular system prompt resident even when a
+    burst of one-off prompts churns the pool), or ``gdsfs`` size-aware
+    frequency: score = uses × covered-tokens ÷ page-span (the TLB's
+    GDSFS score with the prefill compute saved per hit as the cost term),
+    so at equal frequency a partial tail page covering 3 tokens is shed
+    before a full page covering ``page_size`` — both hold one page, but
+    the full page saves more recompute per hit. ``max_pages`` caps the
+    warm cache's footprint: after every admission the index sheds entries
+    it solely owns until it fits (live sequences' pages never count
+    against eviction — freeing them returns nothing)."""
 
     def __init__(self, page_size: int, policy: str = "lru",
                  max_pages: int = 0):
@@ -212,24 +236,31 @@ class PrefixIndex:
             pool.share([pages[li]])
 
     # ----------------------------------------------------------- eviction
+    def _score(self, uses: int, recency: int, covered: int):
+        """Eviction key (min is evicted): recency under ``lru``,
+        (frequency, recency) under ``lfu``, (frequency × covered-tokens ÷
+        page-span, recency) under ``gdsfs`` — the size-aware score."""
+        if self.policy == "lru":
+            return recency
+        if self.policy == "lfu":
+            return (uses, recency)
+        return (uses * covered / self.page_size, recency)     # gdsfs
+
     def _candidates(self):
         """(score, kind, node, key) for every evictable entry — partial
         pages, and leaf full-page nodes (no children, no partials); parents
-        become evictable bottom-up once their subtree is gone. The score is
-        the eviction key: recency under ``lru``, (frequency, recency) under
-        ``lfu``."""
+        become evictable bottom-up once their subtree is gone."""
         out = []
         stack = [self.root]
         while stack:
             n = stack.pop()
             stack.extend(n.children.values())
             for content, (page, lru, uses) in n.partials.items():
-                score = (uses, lru) if self.policy == "lfu" else lru
-                out.append((score, "partial", n, content))
+                out.append((self._score(uses, lru, len(content)),
+                            "partial", n, content))
             if n is not self.root and not n.children and not n.partials:
-                score = (n.uses, n.last_used) if self.policy == "lfu" \
-                    else n.last_used
-                out.append((score, "node", n, n.key))
+                out.append((self._score(n.uses, n.last_used, self.page_size),
+                            "node", n, n.key))
         return out
 
     def evict_one(self, pool: PagePool) -> bool:
@@ -296,7 +327,9 @@ class PagedKVManager:
                  layout: Optional[str] = None, prefix_sharing: bool = True,
                  prefix_policy: str = "lru", prefix_cap_pages: int = 0,
                  tlb_entries: int = 4096, tlb_policy: str = "lru",
-                 tlb_ways: int = 0):
+                 tlb_ways: int = 0,
+                 tlb_prefetch: Optional[PrefetchConfig] = None,
+                 autotune: Optional[AutoTuneConfig] = None):
         assert offload_mode in ("zero_copy", "copy")
         if layout is None:
             layout = "global" if offload_mode == "zero_copy" else "per_slot"
@@ -332,7 +365,13 @@ class PagedKVManager:
         # the simulator configures as a 4-entry hardware IOTLB + Sv39 walk.
         self.iommu = IOMMU(walk_model=CountingWalk(),
                            tlb=TLBConfig(tlb_entries, tlb_policy,
-                                         ways=tlb_ways))
+                                         ways=tlb_ways),
+                           prefetch=tlb_prefetch or PrefetchConfig())
+        # Online geometry auto-tuner (default off): translate_step advances
+        # it one window per decode step; a geometry switch is a flush +
+        # epoch bump, which the engine observes as a full table upload.
+        self.autotuner = (TLBAutoTuner(self.iommu, autotune)
+                          if autotune is not None else None)
         self.free_slots = list(range(n_slots - 1, -1, -1))
         self.seqs: Dict[int, SeqState] = {}
         self.lengths = np.zeros((n_slots,), np.int32)
@@ -578,6 +617,8 @@ class PagedKVManager:
             for lp in range(n):
                 phys, _, _ = self.iommu.translate(st.slot, lp)
                 out.append((st.slot, lp, phys))
+        if self.autotuner is not None:
+            self.autotuner.observe_step()
         return out
 
     def device_tables(self) -> np.ndarray:
@@ -597,13 +638,16 @@ class PagedKVManager:
         util = (sum(p.utilization * p.n_pages for p in pools)
                 / max(sum(p.n_pages for p in pools), 1))
         io = self.iommu.stats()
+        iommu_block = {"walk": io["walk"], "epoch": io["epoch"],
+                       "asids": io["asids"],
+                       "tlb_entries": self.iommu.tlb_config.n_entries,
+                       "tlb_ways": self.iommu.tlb_config.resolved_ways,
+                       "tlb_policy": self.iommu.tlb_config.policy}
+        if self.autotuner is not None:
+            iommu_block["autotune"] = self.autotuner.stats()
         out = {"sva": self.sva_stats.as_dict(),
                "tlb": io["tlb"],
-               "iommu": {"walk": io["walk"], "epoch": io["epoch"],
-                         "asids": io["asids"],
-                         "tlb_entries": self.iommu.tlb_config.n_entries,
-                         "tlb_ways": self.iommu.tlb_config.resolved_ways,
-                         "tlb_policy": self.iommu.tlb_config.policy},
+               "iommu": iommu_block,
                "pool_used": used,
                "pool_free": free,
                "pool_high_water": high,

@@ -25,6 +25,12 @@ TLB semantics mirror the paper's two invalidation granularities:
 ``map``/``extend`` warm per-page translations, ``unmap`` self-invalidates
 only the unmapped ASID's entries (device translations for OTHER mappings
 stay warm), and ``invalidate_epoch`` performs the Listing-1 full flush.
+
+Stats schema (``stats_dict()``; see ARCHITECTURE.md): the ``sva:`` block
+is ``SVAStats.as_dict()`` — map_calls / unmap_calls /
+table_entries_written / bytes_mapped (zero-copy counters) + stage_calls /
+bytes_copied (staging counters) + host_seconds — merged with the owning
+IOMMU's ``tlb:`` / ``walk:`` / ``epoch`` / ``asids`` sections.
 """
 from __future__ import annotations
 

@@ -12,6 +12,12 @@ the fleet-level memory signal, not a per-slot one.
 Pure host-side bookkeeping (numpy/ints); the device arrays live in the
 compiled step's paged pools. Reference counting enables prefix sharing
 (multiple sequences mapping the same physical page, RadixAttention-style).
+
+Stats schema (``PoolStats.as_dict()``; surfaced as the ``pool_*`` gauges
+of ``PagedKVManager.stats()`` — see ARCHITECTURE.md): allocs / frees /
+shares (refcount++ events) / high_water (peak pages in use) /
+failed_allocs (OutOfPages raises) / cow_copies (writes that had to
+duplicate a shared page).
 """
 from __future__ import annotations
 

@@ -14,6 +14,21 @@ Replacement policies (the Kim-et-al. translation design space):
   fifo    insertion order only; hits never reorder
   lfu     evict the least frequently used entry (ties: oldest insertion)
   random  evict a uniformly random entry (seeded — traces stay reproducible)
+  gdsfs   Greedy-Dual-Size-Frequency: every entry carries a priority
+          ``clock + frequency * cost / span`` (``cost`` = the walk cost paid
+          to fill it, ``span`` = how much the entry covers — 1 for a single
+          page translation); evict the minimum priority and age the set's
+          clock up to it. Size-aware: at equal frequency, an entry that was
+          expensive to walk (LLC-cold, no walk-cache hit) outlives a cheap
+          one, and a wide entry outlives a narrow one per byte of reach.
+          Deterministic (no RNG), so traces stay reproducible.
+
+Stats schema (``TLBStats.as_dict()``, the ``tlb:`` section every layer
+reports — see ARCHITECTURE.md): hits / misses / evictions / invalidations /
+walks / conflict_misses / prefetch_issued / prefetch_useful /
+prefetch_late / hit_rate. The prefetch counters are driven by the owning
+:class:`~repro.core.sva.iommu.IOMMU`'s prefetcher (always present, 0 when
+prefetching is off).
 
 Associativity (the second Kim-et-al. axis): ``ways`` splits the cache into
 ``n_entries // ways`` sets indexed by the logical page (the last integer
@@ -33,7 +48,7 @@ from typing import Hashable, Iterable, List, Optional, Tuple
 
 import numpy as np
 
-POLICIES = ("lru", "fifo", "lfu", "random")
+POLICIES = ("lru", "fifo", "lfu", "random", "gdsfs")
 
 
 @dataclass
@@ -44,6 +59,9 @@ class TLBStats:
     invalidations: int = 0
     walks: int = 0           # page-table walks performed (one per genuine miss)
     conflict_misses: int = 0  # misses a same-size fully-assoc cache had room for
+    prefetch_issued: int = 0  # prefetch fills issued (walks done off the demand path)
+    prefetch_useful: int = 0  # prefetched entries that saw a demand hit
+    prefetch_late: int = 0    # useful, but demanded while the walk was in flight
 
     @property
     def hit_rate(self) -> float:
@@ -54,6 +72,9 @@ class TLBStats:
         return dict(hits=self.hits, misses=self.misses,
                     evictions=self.evictions, invalidations=self.invalidations,
                     walks=self.walks, conflict_misses=self.conflict_misses,
+                    prefetch_issued=self.prefetch_issued,
+                    prefetch_useful=self.prefetch_useful,
+                    prefetch_late=self.prefetch_late,
                     hit_rate=round(self.hit_rate, 4))
 
 
@@ -80,6 +101,11 @@ class TranslationCache:
                                          for _ in range(self.n_sets)]
         self._set0 = self._sets[0]      # fully-assoc fast path (hot loop)
         self._freq: dict = {}
+        # gdsfs bookkeeping: per-key [cost, span, priority] (frequency lives
+        # in _freq) and a per-set aging clock (GDSF's L, raised to each
+        # evicted priority so long-resident entries cannot starve new ones).
+        self._meta: dict = {}
+        self._clock: List[float] = [0.0] * self.n_sets
         self._n = 0                               # total resident entries
         self._rng = np.random.default_rng(seed)   # shared across sets
         self.stats = TLBStats()
@@ -107,12 +133,27 @@ class TranslationCache:
                 s.move_to_end(key)
             elif self.policy == "lfu":
                 self._freq[key] += 1
+            elif self.policy == "gdsfs":
+                self._bump_gdsfs(key)
             self.stats.hits += 1
             return s[key], True
         self.stats.misses += 1
         if len(s) >= self.ways and self._n < self.n_entries:
             self.stats.conflict_misses += 1
         return None, False
+
+    def _bump_gdsfs(self, key: Hashable, cost: Optional[float] = None,
+                    span: Optional[float] = None) -> None:
+        """A use under gdsfs: frequency++ and re-price the priority at the
+        current set clock (optionally refreshing cost/span)."""
+        self._freq[key] += 1
+        m = self._meta[key]
+        if cost is not None and cost > 0:
+            m[0] = cost
+        if span is not None and span > 0:
+            m[1] = span
+        si = 0 if self.n_sets == 1 else self._set_index(key)
+        m[2] = self._clock[si] + self._freq[key] * m[0] / m[1]
 
     def _evict_one(self, set_index: int) -> None:
         s = self._sets[set_index]
@@ -121,23 +162,38 @@ class TranslationCache:
         elif self.policy == "lfu":
             # min frequency; ties broken by insertion order (OrderedDict scan)
             victim = min(s, key=lambda k: self._freq[k])
+        elif self.policy == "gdsfs":
+            # min priority; ties broken by insertion order. Aging: the set
+            # clock rises to the evicted priority (GDSF's L), so a stale
+            # high-cost entry eventually loses to fresh traffic.
+            victim = min(s, key=lambda k: self._meta[k][2])
+            self._clock[set_index] = self._meta[victim][2]
         else:                                     # random (seeded)
             keys = list(s)
             victim = keys[int(self._rng.integers(len(keys)))]
         del s[victim]
         self._freq.pop(victim, None)
+        self._meta.pop(victim, None)
         self._n -= 1
         self.stats.evictions += 1
 
-    def fill(self, key: Hashable, value, walked: bool = True) -> None:
+    def fill(self, key: Hashable, value, walked: bool = True,
+             cost: Optional[float] = None, span: float = 1.0) -> None:
         """Insert a translation. A walk is counted ONLY for a genuine
         walk-and-fill (``walked=True`` AND the key not already resident):
         refreshing a live entry (e.g. re-warming on ``extend``) or a host
         pre-warm at map time (``walked=False`` — the driver wrote the PTE,
         no device walk happened) must not inflate Fig.5-style walk
         counts. A refresh still counts as a *use* (it re-ups recency under
-        ``lru`` and frequency under ``lfu`` — a page kept hot by map/extend
-        re-warms must not look cold to the replacement policy)."""
+        ``lru``, frequency under ``lfu``, and priority under ``gdsfs`` — a
+        page kept hot by map/extend re-warms must not look cold to the
+        replacement policy).
+
+        ``cost``/``span`` feed the gdsfs score (frequency × cost ÷ span):
+        ``cost`` is the walk cost paid to produce this translation (None or
+        0 prices as 1 — e.g. CountingWalk fills, where gdsfs degrades to a
+        frequency policy), ``span`` what the entry covers. Ignored by every
+        other policy."""
         si = 0 if self.n_sets == 1 else self._set_index(key)
         s = self._sets[si]
         if key in s:
@@ -145,6 +201,8 @@ class TranslationCache:
                 s.move_to_end(key)
             elif self.policy == "lfu":
                 self._freq[key] += 1
+            elif self.policy == "gdsfs":
+                self._bump_gdsfs(key, cost, span)
             s[key] = value
             return
         if walked:
@@ -153,6 +211,10 @@ class TranslationCache:
             self._evict_one(si)
         s[key] = value
         self._freq[key] = 1
+        if self.policy == "gdsfs":
+            c = cost if cost is not None and cost > 0 else 1.0
+            sp = span if span > 0 else 1.0
+            self._meta[key] = [c, sp, self._clock[si] + c / sp]
         self._n += 1
 
     def invalidate(self) -> None:
@@ -162,6 +224,8 @@ class TranslationCache:
         for s in self._sets:
             s.clear()
         self._freq.clear()
+        self._meta.clear()
+        self._clock = [0.0] * self.n_sets
         self._n = 0
         self.stats.invalidations += 1
 
@@ -170,6 +234,7 @@ class TranslationCache:
         if s.pop(key, None) is not None:
             self._n -= 1
         self._freq.pop(key, None)
+        self._meta.pop(key, None)
 
     def keys(self) -> Iterable[Hashable]:
         out: List[Hashable] = []

@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Docs smoke checker (CI `docs` job; runnable locally).
+
+Two checks, both driven from the repo's markdown itself so the docs cannot
+drift from the code:
+
+  1. **Intra-repo links resolve.** Every relative ``[text](target)`` link
+     in the repo's markdown surface (README.md, benchmarks/README.md,
+     ARCHITECTURE.md, ROADMAP.md, CHANGES.md, PAPER.md, PAPERS.md) must
+     point at an existing file or directory (anchors are stripped;
+     external http(s)/mailto links are skipped).
+
+  2. **The README quickstart runs as-is.** Commands are extracted from
+     README.md's fenced code blocks: any line starting with
+     ``PYTHONPATH=src`` is considered an executable quickstart command
+     (install lines like ``pip install ...`` are prose, not checked).
+     ``--run`` executes each from the repo root and fails on a nonzero
+     exit; without ``--run`` the commands are only listed (cheap local
+     lint).
+
+Exit status: 0 = all good, 1 = broken links or a failed command.
+
+  python tools/check_docs.py            # link check + list commands
+  python tools/check_docs.py --run      # CI: also execute the quickstart
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+DOC_FILES = ("README.md", "benchmarks/README.md", "ARCHITECTURE.md",
+             "ROADMAP.md", "CHANGES.md", "PAPER.md", "PAPERS.md")
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```[a-z]*\n(.*?)```", re.S)
+
+
+def check_links() -> list:
+    errors = []
+    for rel in DOC_FILES:
+        path = REPO / rel
+        if not path.exists():
+            continue                      # optional docs are optional
+        text = path.read_text()
+        for target in LINK_RE.findall(text):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
+                continue
+            if target.startswith("#"):                     # in-page anchor
+                continue
+            clean = target.split("#", 1)[0]
+            if not clean:
+                continue
+            resolved = (path.parent / clean).resolve()
+            if not resolved.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+    return errors
+
+
+def quickstart_commands() -> list:
+    readme = (REPO / "README.md").read_text()
+    cmds = []
+    for block in FENCE_RE.findall(readme):
+        for line in block.splitlines():
+            line = line.strip()
+            if line.startswith("PYTHONPATH=src"):
+                cmds.append(line)
+    return cmds
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--run", action="store_true",
+                    help="execute the extracted quickstart commands")
+    args = ap.parse_args()
+
+    errors = check_links()
+    for e in errors:
+        print(f"LINK FAIL  {e}")
+    n_links = sum(1 for rel in DOC_FILES if (REPO / rel).exists())
+    print(f"link check: {n_links} docs scanned, {len(errors)} broken")
+
+    cmds = quickstart_commands()
+    if not cmds:
+        print("QUICKSTART FAIL: no PYTHONPATH=src commands found in "
+              "README.md code blocks")
+        return 1
+    for cmd in cmds:
+        if not args.run:
+            print(f"quickstart (not run): {cmd}")
+            continue
+        print(f"quickstart RUN: {cmd}", flush=True)
+        proc = subprocess.run(["bash", "-c", cmd], cwd=REPO)
+        if proc.returncode != 0:
+            print(f"QUICKSTART FAIL ({proc.returncode}): {cmd}")
+            return 1
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
