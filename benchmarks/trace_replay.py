@@ -22,6 +22,10 @@ Trace events (recorded by ``ServingEngine(record_translation_trace=True)``):
                                 entries + prefetcher state die with the
                                 slot, mirroring the live engine's detach)
 
+Events are shape-checked on replay: a malformed event raises
+:class:`TraceFormatError` naming the event index and the expected shape
+(instead of an anonymous unpacking error — or silently wrong numbers).
+
 Adaptive replay: construct the IOMMU with a
 :class:`~repro.core.sva.iommu.PrefetchConfig` to replay with IOTLB
 prefetching, and/or pass ``tuner=TLBAutoTuner(iommu, AutoTuneConfig(...))``
@@ -36,6 +40,55 @@ from typing import List, Optional, Tuple
 from repro.configs.paper_soc import PaperSoCConfig
 from repro.core.simulator.platform import H2A
 from repro.core.sva.iommu import IOMMU, TLBAutoTuner
+
+
+class TraceFormatError(ValueError):
+    """A recorded trace event does not match the documented schema.
+
+    Raised with the EVENT INDEX and the expected shape, so a malformed
+    trace (hand-written, truncated by a crashed recording run, or produced
+    by an engine version with a different schema) fails loudly at the
+    offending event instead of as a bare unpacking ``ValueError`` deep in
+    the replay loop — or worse, as silently wrong cycle numbers."""
+
+    def __init__(self, index: int, got, expected: str):
+        self.index = index
+        self.expected = expected
+        super().__init__(
+            f"trace event {index} is malformed: got {got!r}; "
+            f"expected {expected}")
+
+
+_EVENT_SHAPES = {
+    "map": '("map", pages) or ("map", pages, slot, row)',
+    "step": '("step", accesses, tokens) with accesses a sequence of '
+            '(slot, lp, phys) triples',
+    "unmap": '("unmap", slot, n_pages)',
+}
+
+
+def _validate_event(i: int, ev) -> str:
+    """Shape-check one trace event; returns its kind ("map"/"step"/"unmap")
+    or raises :class:`TraceFormatError` naming the event index."""
+    if not isinstance(ev, (tuple, list)) or not ev:
+        raise TraceFormatError(
+            i, ev, "a non-empty tuple " + " / ".join(_EVENT_SHAPES.values()))
+    kind = ev[0]
+    if kind not in _EVENT_SHAPES:
+        raise TraceFormatError(
+            i, ev, 'event kind "map" | "step" | "unmap", one of: '
+            + " / ".join(_EVENT_SHAPES.values()))
+    if kind == "map":
+        if len(ev) not in (2, 4) or isinstance(ev[1], (str, int, float)):
+            raise TraceFormatError(i, ev, _EVENT_SHAPES["map"])
+    elif kind == "unmap":
+        if len(ev) != 3 or not all(isinstance(x, int) for x in ev[1:]):
+            raise TraceFormatError(i, ev, _EVENT_SHAPES["unmap"])
+    else:  # step
+        if (len(ev) != 3 or isinstance(ev[1], (str, int, float))
+                or not isinstance(ev[2], (int, float))):
+            raise TraceFormatError(i, ev, _EVENT_SHAPES["step"])
+    return kind
 
 
 def _install_row(iommu: IOMMU, slot: int, row) -> None:
@@ -64,12 +117,13 @@ def replay_trace(trace, iommu: IOMMU, kv_bytes_per_token: int,
     their cycles only show in the walk model's totals)."""
     burst = (dram_latency + soc.dram_base_latency) * H2A
     per_step: List[Tuple[float, float]] = []
-    for ev in trace:
-        if ev[0] == "map":
+    for i, ev in enumerate(trace):
+        kind = _validate_event(i, ev)
+        if kind == "map":
             iommu.host_map_pass(ev[1])
             if len(ev) >= 4:
                 _install_row(iommu, ev[2], ev[3])
-        elif ev[0] == "unmap":
+        elif kind == "unmap":
             _, slot, n_pages = ev
             # Mirror the live engine's release -> detach: a per-ASID
             # invalidation drops the slot's TLB entries AND the
@@ -85,7 +139,12 @@ def replay_trace(trace, iommu: IOMMU, kv_bytes_per_token: int,
         else:
             _, accesses, tokens = ev
             ptw = 0.0
-            for slot, lp, phys in accesses:
+            for acc in accesses:
+                try:
+                    slot, lp, phys = acc
+                except (TypeError, ValueError):
+                    raise TraceFormatError(i, ev, _EVENT_SHAPES["step"]) \
+                        from None
                 # translate() re-walks stale hits itself (the recorded phys
                 # is ground truth after a CoW remap)
                 _, cost, _ = iommu.translate(slot, lp, phys=phys)

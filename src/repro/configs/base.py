@@ -123,6 +123,10 @@ class ModelConfig:
     # empty tuple uses a default entries ladder around serve_tlb_entries.
     serve_tlb_autotune: int = 0
     serve_tlb_autotune_candidates: Tuple[Tuple[int, int, str], ...] = ()
+    # svasan (core/sva/sanitizer.py): shadow-state checking of the paged
+    # SVA stack while serving. False still honors the REPRO_SVASAN=1
+    # environment knob; True forces it on for this config.
+    svasan: bool = False
 
     def __post_init__(self):
         if self.d_head == 0:

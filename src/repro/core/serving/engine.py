@@ -278,6 +278,8 @@ class ServingEngine:
                                   tlb_entries=cfg.serve_tlb_entries,
                                   tlb_policy=cfg.serve_tlb_policy,
                                   tlb_ways=cfg.serve_tlb_ways,
+                                  # None defers to REPRO_SVASAN (svasan)
+                                  sanitize=True if cfg.svasan else None,
                                   tlb_prefetch=prefetch,
                                   autotune=autotune)
         # Translation trace: ("map", fresh_pages) at admission (Listing-1

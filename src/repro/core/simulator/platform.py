@@ -29,6 +29,8 @@ import numpy as np
 from repro.configs.paper_soc import PaperSoCConfig
 from repro.core.sva.iommu import (IOMMU, PrefetchConfig, Sv39Walk, TLBConfig,
                                   WalkCacheConfig)
+from repro.core.sva.sanitizer import SVASanitizer
+from repro.core.sva.sanitizer import resolve as _resolve_sanitize
 
 H2A = 20.0 / 50.0     # host-domain cycles -> accelerator cycles
 
@@ -56,6 +58,9 @@ class SimConfig:
     iotlb_prefetch_degree: int = 2
     iotlb_prefetch_distance: int = 4
     seed: int = 0
+    # svasan (core/sva/sanitizer.py): attach the shadow-state checker to
+    # this platform's IOMMU. False still honors REPRO_SVASAN=1.
+    svasan: bool = False
 
 
 @dataclass
@@ -120,6 +125,12 @@ class MemorySystem:
             prefetch=PrefetchConfig(cfg.iotlb_prefetch_policy,
                                     degree=cfg.iotlb_prefetch_degree,
                                     distance=cfg.iotlb_prefetch_distance))
+        # svasan: opt-in shadow-state checking over this IOMMU's unmap/
+        # prefetch discipline (the simulator drives identity translations,
+        # so only the attached-space cross-checks are live).
+        if _resolve_sanitize(True if cfg.svasan else None):
+            san = SVASanitizer()
+            self.iommu.sanitizer = san
 
     @property
     def iotlb(self):

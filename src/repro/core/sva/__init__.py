@@ -13,6 +13,12 @@ resident prompt prefix via refcount++ (zero-copy across *requests*, the
 paper's map-don't-copy result one level up), writes into shared pages CoW,
 and released prompts persist as a warm prefix cache with policy-pluggable
 (lru/lfu, optionally capped) eviction.
+
+Runtime checking: :mod:`~repro.core.sva.sanitizer` ("svasan") is an opt-in
+ASan-style shadow-state checker over the whole layer — per-page
+FREE/OWNED/SHARED state machine, translate-after-unmap and stale-prefetch
+cross-checks, CoW-bypass and leak detection. Enable with ``REPRO_SVASAN=1``
+or the per-constructor ``sanitize=True`` knobs; zero overhead when off.
 """
 from repro.core.sva.iommu import (IOMMU, CountingWalk, IOAddressSpace,
                                   Sv39Walk, TLBConfig, WalkModel, WalkStats)
@@ -20,10 +26,13 @@ from repro.core.sva.kv_manager import (CapacityError, PagedKVManager,
                                        PrefixIndex, PrefixStats, SeqState)
 from repro.core.sva.mapping import Mapping, SVASpace, SVAStats
 from repro.core.sva.page_pool import OutOfPages, PagePool, PoolStats
+from repro.core.sva.sanitizer import (SanitizerError, SVASanitizer,
+                                      SvasanReport)
 from repro.core.sva.tlb import TLBStats, TranslationCache
 
 __all__ = ["CapacityError", "CountingWalk", "IOAddressSpace", "IOMMU",
            "Mapping", "OutOfPages", "PagePool", "PagedKVManager",
-           "PoolStats", "PrefixIndex", "PrefixStats", "SVASpace", "SVAStats",
-           "SeqState", "Sv39Walk", "TLBConfig", "TLBStats",
+           "PoolStats", "PrefixIndex", "PrefixStats", "SVASanitizer",
+           "SVASpace", "SVAStats", "SanitizerError", "SeqState",
+           "Sv39Walk", "SvasanReport", "TLBConfig", "TLBStats",
            "TranslationCache", "WalkModel", "WalkStats"]

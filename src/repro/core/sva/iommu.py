@@ -62,12 +62,15 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import (Dict, Iterable, List, Optional, Protocol, Sequence,
-                    Tuple, runtime_checkable)
+from typing import (TYPE_CHECKING, Dict, Iterable, List, Optional, Protocol,
+                    Sequence, Tuple, runtime_checkable)
 
 import numpy as np
 
 from repro.core.sva.tlb import POLICIES, TLBStats, TranslationCache
+
+if TYPE_CHECKING:                                  # pragma: no cover
+    from repro.core.sva.sanitizer import SVASanitizer
 
 
 @dataclass(frozen=True)
@@ -421,10 +424,15 @@ class IOAddressSpace:
         if lps is None:
             self.table.clear()
             self.iommu.invalidate(asid=self.asid)
+            if self.iommu.sanitizer is not None:
+                self.iommu.sanitizer.check_unmapped(self.iommu, self.asid)
             return
+        lps = list(lps)               # iterated twice — accept generators
         for lp in lps:
             self.table.pop(lp, None)
         self.iommu.invalidate(pages=[(self.asid, lp) for lp in lps])
+        if self.iommu.sanitizer is not None:
+            self.iommu.sanitizer.check_unmapped(self.iommu, self.asid, lps)
 
     # --------------------------------------------------------- translation
     def translate(self, lp: int) -> Tuple[int, float, bool]:
@@ -467,6 +475,9 @@ class IOMMU:
         self._streams: Dict[int, List[int]] = {}
         self.epoch = 0
         self._spaces: Dict[int, IOAddressSpace] = {}
+        # svasan shadow-state hook (core/sva/sanitizer.py); None keeps
+        # translate()/unmap paths bit-identical to the unsanitized stack.
+        self.sanitizer: Optional["SVASanitizer"] = None
 
     # ----------------------------------------------------------- lifecycle
     def attach(self, asid: int) -> IOAddressSpace:
@@ -494,6 +505,10 @@ class IOMMU:
             for key in [k for k in self._pending if k[0] == asid]:
                 del self._pending[key]
             self._streams.pop(asid, None)
+        if self.sanitizer is not None:
+            # nothing of the dead space may survive detach: no TLB entry,
+            # no in-flight prefetch fill
+            self.sanitizer.check_unmapped(self, asid)
         sp.table.clear()
 
     def space(self, asid: int) -> Optional[IOAddressSpace]:
@@ -538,6 +553,12 @@ class IOMMU:
             hit = False
             late_cost = 0.0
         if hit:
+            if self.sanitizer is not None and phys is None:
+                # hit-path cross-check against the live table (translate-
+                # after-unmap / missed-remap-invalidation detector). Replay
+                # callers pass ``phys`` ground truth and re-walk stale hits
+                # above — their tables are deliberately looser.
+                self.sanitizer.check_hit(self, asid, page, val)
             if key in self._prefetched:
                 self._prefetched.discard(key)
                 self.tlb.stats.prefetch_useful += 1
@@ -576,6 +597,8 @@ class IOMMU:
         for key, (pp, cost) in self._pending.items():
             if key == demand_key:
                 late = cost
+            if self.sanitizer is not None:
+                self.sanitizer.check_fill(self, key, pp)
             self.tlb.fill(key, pp, walked=False, cost=cost)
             self._prefetched.add(key)
         self._pending.clear()

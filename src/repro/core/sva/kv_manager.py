@@ -72,6 +72,8 @@ from repro.core.sva.iommu import (IOMMU, AutoTuneConfig, CountingWalk,
                                   PrefetchConfig, TLBAutoTuner, TLBConfig)
 from repro.core.sva.mapping import SVAStats
 from repro.core.sva.page_pool import OutOfPages, PagePool
+from repro.core.sva.sanitizer import SVASanitizer
+from repro.core.sva.sanitizer import resolve as _resolve_sanitize
 
 
 class CapacityError(ValueError):
@@ -329,7 +331,8 @@ class PagedKVManager:
                  tlb_entries: int = 4096, tlb_policy: str = "lru",
                  tlb_ways: int = 0,
                  tlb_prefetch: Optional[PrefetchConfig] = None,
-                 autotune: Optional[AutoTuneConfig] = None):
+                 autotune: Optional[AutoTuneConfig] = None,
+                 sanitize: Optional[bool] = None):
         assert offload_mode in ("zero_copy", "copy")
         if layout is None:
             layout = "global" if offload_mode == "zero_copy" else "per_slot"
@@ -372,6 +375,14 @@ class PagedKVManager:
         # epoch bump, which the engine observes as a full table upload.
         self.autotuner = (TLBAutoTuner(self.iommu, autotune)
                           if autotune is not None else None)
+        # svasan (core/sva/sanitizer.py): opt-in shadow-state checking over
+        # the pool(s) + the IOMMU. ``sanitize=None`` defers to REPRO_SVASAN.
+        self.sanitizer = (SVASanitizer() if _resolve_sanitize(sanitize)
+                          else None)
+        if self.sanitizer is not None:
+            for p in ([self.pool] if self.pool is not None else self.pools):
+                self.sanitizer.attach_pool(p)
+            self.iommu.sanitizer = self.sanitizer
         self.free_slots = list(range(n_slots - 1, -1, -1))
         self.seqs: Dict[int, SeqState] = {}
         self.lengths = np.zeros((n_slots,), np.int32)
@@ -541,6 +552,10 @@ class PagedKVManager:
             # step), so duplicating/stealing its target page would only
             # waste a copy or destroy a still-useful cache entry.
             self._cow_before_write(st)
+            if self.sanitizer is not None:
+                # post-CoW: the page about to be written must be ours alone
+                self.sanitizer.check_write(
+                    self.pool, st.pages[(st.length - 1) // self.page_size])
 
     def _cow_before_write(self, st: SeqState) -> None:
         """The token just appended will be WRITTEN (by the next decode step)
@@ -578,6 +593,8 @@ class PagedKVManager:
         st = self.seqs.pop(seq_id)
         free_pool = (self.pool if self.layout == "global"
                      else self.pools[st.slot])
+        snap = (self.sanitizer.snapshot_rc(free_pool, st.pages)
+                if self.sanitizer is not None else None)
         free_pool.free(st.pages)
         self.free_slots.append(st.slot)
         self.lengths[st.slot] = 0
@@ -588,6 +605,9 @@ class PagedKVManager:
         # full flush is invalidate_epoch)
         self.iommu.detach(st.slot)
         self.dirty_rows.add(st.slot)
+        if self.sanitizer is not None:
+            # every reference the sequence held must actually be gone
+            self.sanitizer.check_release(free_pool, seq_id, st.pages, snap)
 
     # ------------------------------------------------------------ device view
     def delta_rows(self) -> List[int]:
@@ -659,4 +679,6 @@ class PagedKVManager:
                              "cached_pages": self.prefix.n_cached_pages,
                              "policy": self.prefix.policy,
                              "max_pages": self.prefix.max_pages}
+        if self.sanitizer is not None:
+            out["svasan"] = self.sanitizer.stats()
         return out

@@ -42,6 +42,8 @@ import numpy as np
 
 from repro.core.sva.iommu import IOMMU, CountingWalk, TLBConfig
 from repro.core.sva.page_pool import PagePool
+from repro.core.sva.sanitizer import SVASanitizer
+from repro.core.sva.sanitizer import resolve as _resolve_sanitize
 
 
 @dataclass
@@ -80,13 +82,21 @@ class SVASpace:
     the unified IOMMU front-end (one ASID per mapping handle)."""
 
     def __init__(self, pool: PagePool, tlb_entries: int = 1024,
-                 tlb_policy: str = "lru"):
+                 tlb_policy: str = "lru",
+                 sanitize: Optional[bool] = None):
         self.pool = pool
         self.iommu = IOMMU(walk_model=CountingWalk(),
                            tlb=TLBConfig(tlb_entries, tlb_policy))
         self.stats = SVAStats()
         self._next = 1
         self._maps: Dict[int, Mapping] = {}
+        # svasan (core/sva/sanitizer.py): ``sanitize=None`` defers to the
+        # REPRO_SVASAN environment knob; off is the historical behavior.
+        self.sanitizer = (SVASanitizer() if _resolve_sanitize(sanitize)
+                          else None)
+        if self.sanitizer is not None:
+            self.sanitizer.attach_pool(pool)
+            self.iommu.sanitizer = self.sanitizer
 
     @property
     def tlb(self):

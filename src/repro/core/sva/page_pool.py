@@ -22,9 +22,12 @@ duplicate a shared page).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import TYPE_CHECKING, Dict, List, Optional
 
 import numpy as np
+
+if TYPE_CHECKING:                                  # pragma: no cover
+    from repro.core.sva.sanitizer import SVASanitizer
 
 
 class OutOfPages(RuntimeError):
@@ -50,12 +53,19 @@ class PoolStats:
 class PagePool:
     """Fixed-size pool of physical pages with refcounts and a LIFO free list."""
 
-    def __init__(self, n_pages: int, page_size: int):
+    def __init__(self, n_pages: int, page_size: int,
+                 sanitizer: Optional["SVASanitizer"] = None):
         self.n_pages = n_pages
         self.page_size = page_size
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         self._ref = np.zeros(n_pages, dtype=np.int32)
         self.stats = PoolStats()
+        # svasan shadow-state hook (core/sva/sanitizer.py). None (default)
+        # keeps every hot path one attribute test away from the historical
+        # behavior; attach via SVASanitizer.attach_pool().
+        self.sanitizer: Optional["SVASanitizer"] = None
+        if sanitizer is not None:
+            sanitizer.attach_pool(self)
 
     @property
     def n_free(self) -> int:
@@ -70,6 +80,8 @@ class PagePool:
             self.stats.failed_allocs += 1
             raise OutOfPages(f"need {n} pages, {len(self._free)} free")
         pages = [self._free.pop() for _ in range(n)]
+        if self.sanitizer is not None:
+            self.sanitizer.on_alloc(self, pages)
         for p in pages:
             assert self._ref[p] == 0
             self._ref[p] = 1
@@ -79,12 +91,18 @@ class PagePool:
 
     def share(self, pages: List[int]) -> None:
         """Refcount++ (prefix sharing: a second sequence maps the same pages)."""
+        if self.sanitizer is not None:
+            self.sanitizer.on_share(self, pages)
         for p in pages:
             assert self._ref[p] > 0, f"share of unmapped page {p}"
             self._ref[p] += 1
         self.stats.shares += len(pages)
 
     def free(self, pages: List[int]) -> None:
+        # sanitizer first: a double-free raises a precise SanitizerError
+        # before the bare assert below would trip
+        if self.sanitizer is not None:
+            self.sanitizer.on_free(self, pages)
         for p in pages:
             assert self._ref[p] > 0, f"double free of page {p}"
             self._ref[p] -= 1

@@ -62,7 +62,7 @@ def main(argv=None) -> int:
           f"mode={args.offload_mode}")
     print(json.dumps({k: v for k, v in s.items()
                       if k in ("prefills", "decode_steps", "staging_copies",
-                               "sva", "tlb", "iommu")}, indent=1))
+                               "sva", "tlb", "iommu", "svasan")}, indent=1))
     return 0
 
 

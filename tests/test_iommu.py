@@ -322,14 +322,17 @@ def test_iommu_hypothesis_invariants():
 
 def test_no_raw_translation_cache_outside_iommu():
     """API acceptance: no module outside core/sva/iommu.py instantiates a
-    raw TranslationCache — everything goes through the IOMMU front-end."""
+    raw TranslationCache — everything goes through the IOMMU front-end.
+
+    The check itself lives in ``tools/svalint`` rule R001 (an AST-based
+    lint, so comments/strings mentioning the class no longer trip it);
+    this test delegates so the invariant keeps running in plain pytest
+    even when CI's dedicated static-analysis job is skipped."""
+    from tools.svalint import lint_paths
+
     root = Path(__file__).resolve().parents[1]
-    needle = "TranslationCache" + "("        # keep THIS file clean
-    offenders = []
-    for sub in ("src", "benchmarks", "examples", "tests"):
-        for py in sorted((root / sub).rglob("*.py")):
-            if py.name == "iommu.py" or py == Path(__file__).resolve():
-                continue
-            if needle in py.read_text():
-                offenders.append(str(py.relative_to(root)))
-    assert not offenders, f"raw TranslationCache construction in {offenders}"
+    findings = [f for f in lint_paths(root, ["src", "benchmarks",
+                                             "examples", "tests"],
+                                      rules=["R001"])]
+    assert not findings, "raw TranslationCache access outside the " \
+        "IOMMU front-end:\n" + "\n".join(str(f) for f in findings)

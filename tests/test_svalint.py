@@ -1,0 +1,229 @@
+"""tools/svalint fixture tests: each rule R001-R005 must fire on a
+minimal in-memory violation (via ``lint_sources``) and stay silent on the
+minimal clean counterpart — so a refactor of the linter that silently
+disables a rule fails here, not in review. The final test pins the real
+tree clean (the repo's own acceptance gate, same check CI runs)."""
+from pathlib import Path
+
+import pytest
+
+from tools.svalint import (DOC_FILES, RULES, Finding, lint_paths,
+                           lint_sources)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# A minimal ARCHITECTURE.md whose schema section matches _STATS_SRC below.
+_ARCH_OK = """# arch
+## Stats schema
+```
+hits: <count>
+```
+## next
+"""
+
+_STATS_SRC = """
+class S:
+    def stats(self):
+        return {"hits": 1}
+"""
+
+
+def _base_sources():
+    """Smallest source tree that is clean under every rule."""
+    return {
+        "ARCHITECTURE.md": _ARCH_OK,
+        "README.md": "docs\n",
+        "benchmarks/README.md": "docs\n",
+        "src/repro/core/sva/iommu.py": _STATS_SRC,
+    }
+
+
+def test_clean_fixture_is_clean():
+    assert lint_sources(_base_sources()) == []
+
+
+# ----------------------------------------------------------------- R001
+
+def test_r001_fires_on_raw_translation_cache_construction():
+    src = _base_sources()
+    src["src/repro/core/serving/engine.py"] = (
+        "from repro.core.sva.tlb import TranslationCache\n"
+        "tlb = TranslationCache(cfg)\n")
+    findings = lint_sources(src, rules=["R001"])
+    assert rules_of(findings) == {"R001"}
+    assert findings[0].path == "src/repro/core/serving/engine.py"
+    assert findings[0].line == 2
+
+
+def test_r001_fires_on_internals_access_outside_tests():
+    src = _base_sources()
+    src["benchmarks/sweep.py"] = "n = iommu.tlb._sets[0]\n"
+    assert rules_of(lint_sources(src, rules=["R001"])) == {"R001"}
+
+
+def test_r001_allows_iommu_and_whitebox_tests():
+    src = _base_sources()
+    # the front-end itself may construct; white-box tests may inspect
+    src["src/repro/core/sva/iommu.py"] += "\nt = TranslationCache(cfg)\n"
+    src["tests/test_geometry.py"] = "occ = iommu.tlb._sets[0]\n"
+    assert lint_sources(src, rules=["R001"]) == []
+
+
+def test_r001_suppression_comment():
+    src = _base_sources()
+    src["benchmarks/sweep.py"] = \
+        "t = TranslationCache(cfg)  # svalint: disable=R001\n"
+    assert lint_sources(src, rules=["R001"]) == []
+
+
+# ----------------------------------------------------------------- R002
+
+def test_r002_fires_on_raw_pool_mutation():
+    src = _base_sources()
+    src["src/repro/core/serving/engine.py"] = (
+        "def admit(self):\n"
+        "    self.pool._free.pop()\n")
+    findings = lint_sources(src, rules=["R002"])
+    assert rules_of(findings) == {"R002"}
+
+
+def test_r002_fires_on_pool_alloc_outside_manager():
+    src = _base_sources()
+    src["benchmarks/bench.py"] = "pages = pool.alloc(4)\n"
+    assert rules_of(lint_sources(src, rules=["R002"])) == {"R002"}
+
+
+def test_r002_allows_manager_and_cow_path():
+    src = _base_sources()
+    src["src/repro/core/sva/kv_manager.py"] = (
+        "def admit(self):\n"
+        "    return self.pool.alloc(1)\n")
+    src["src/repro/core/serving/engine.py"] = (
+        "class E:\n"
+        "    def _apply_cow(self):\n"
+        "        return self.pool.alloc(1)\n")
+    assert lint_sources(src, rules=["R002"]) == []
+
+
+# ----------------------------------------------------------------- R003
+
+def test_r003_fires_on_undocumented_emitted_key():
+    src = _base_sources()
+    src["src/repro/core/sva/iommu.py"] = (
+        "class S:\n"
+        "    def stats(self):\n"
+        "        return {\"hits\": 1, \"novel_key\": 2}\n")
+    findings = lint_sources(src, rules=["R003"])
+    assert any("novel_key" in f.msg for f in findings)
+
+
+def test_r003_fires_on_documented_but_never_emitted_key():
+    src = _base_sources()
+    src["ARCHITECTURE.md"] = _ARCH_OK.replace(
+        "hits: <count>", "hits: <count>\nghost_key: <never emitted>")
+    findings = lint_sources(src, rules=["R003"])
+    assert any("ghost_key" in f.msg for f in findings)
+
+
+def test_r003_fires_when_schema_section_missing():
+    src = _base_sources()
+    src["ARCHITECTURE.md"] = "# arch with no schema section\n"
+    findings = lint_sources(src, rules=["R003"])
+    assert findings and findings[0].path == "ARCHITECTURE.md"
+
+
+# ----------------------------------------------------------------- R004
+
+def test_r004_fires_on_item_in_jitted_function():
+    src = _base_sources()
+    src["src/repro/core/serving/engine.py"] = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def step(x):\n"
+        "    return x.item()\n")
+    findings = lint_sources(src, rules=["R004"])
+    assert rules_of(findings) == {"R004"}
+
+
+def test_r004_fires_transitively_and_on_shape_branch():
+    src = _base_sources()
+    src["src/repro/kernels/k.py"] = (
+        "import jax\n"
+        "def helper(x):\n"
+        "    if x.shape[0] > 4:\n"
+        "        return int(x)\n"
+        "    return x\n"
+        "@jax.jit\n"
+        "def entry(x):\n"
+        "    return helper(x)\n")
+    findings = lint_sources(src, rules=["R004"])
+    assert len(findings) >= 2          # the branch AND the int() cast
+
+
+def test_r004_allows_static_shape_reads_and_guards():
+    src = _base_sources()
+    src["src/repro/core/serving/engine.py"] = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def step(x):\n"
+        "    n = int(x.shape[0])\n"     # static under trace
+        "    if x.ndim != 2:\n"         # raise-only guard is exempt
+        "        raise ValueError(\"rank\")\n"
+        "    return x * n\n")
+    assert lint_sources(src, rules=["R004"]) == []
+
+
+def test_r004_ignores_host_side_code():
+    src = _base_sources()
+    src["src/repro/core/serving/engine.py"] = (
+        "def host_helper(x):\n"
+        "    return x.item()\n")       # never jitted -> fine
+    assert lint_sources(src, rules=["R004"]) == []
+
+
+# ----------------------------------------------------------------- R005
+
+def test_r005_fires_on_undocumented_flag():
+    src = _base_sources()
+    src["benchmarks/bench.py"] = (
+        "import argparse\n"
+        "ap = argparse.ArgumentParser()\n"
+        "ap.add_argument(\"--mystery-flag\")\n")
+    findings = lint_sources(src, rules=["R005"])
+    assert rules_of(findings) == {"R005"}
+    assert "--mystery-flag" in findings[0].msg
+
+
+def test_r005_documented_flag_is_clean():
+    src = _base_sources()
+    src["benchmarks/bench.py"] = (
+        "import argparse\n"
+        "ap = argparse.ArgumentParser()\n"
+        "ap.add_argument(\"--depth\")\n")
+    src["benchmarks/README.md"] = "Use `--depth N` to set depth.\n"
+    assert lint_sources(src, rules=["R005"]) == []
+
+
+# ------------------------------------------------------------ the gate
+
+def test_finding_format():
+    f = Finding("a/b.py", 7, "R001", "boom")
+    assert str(f) == "a/b.py:7: R001 boom"
+
+
+def test_rule_registry_and_doc_files():
+    assert RULES == ("R001", "R002", "R003", "R004", "R005")
+    for doc in DOC_FILES:
+        assert (ROOT / doc).exists(), doc
+
+
+def test_real_tree_is_clean():
+    """The acceptance gate: the repo's own tree lints clean — identical to
+    CI's `python -m tools.svalint src tests benchmarks examples`."""
+    findings = lint_paths(ROOT, ["src", "tests", "benchmarks", "examples"])
+    assert findings == [], "\n".join(str(f) for f in findings)

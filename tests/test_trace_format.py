@@ -1,0 +1,70 @@
+"""Trace event-schema validation (benchmarks/trace_replay.py): malformed
+events fail with :class:`TraceFormatError` naming the event index and the
+expected shape — the regression this pins is a truncated or hand-edited
+trace dying as an anonymous unpacking ``ValueError`` (or replaying as
+silently wrong cycle numbers)."""
+import pytest
+
+from benchmarks.trace_replay import TraceFormatError, replay_trace
+from repro.configs.paper_soc import PaperSoCConfig
+from repro.core.sva.iommu import IOMMU, CountingWalk, TLBConfig
+
+SOC = PaperSoCConfig()
+
+
+def mk_iommu():
+    return IOMMU(walk_model=CountingWalk(), tlb=TLBConfig(8, "lru"))
+
+
+def replay(trace):
+    return replay_trace(trace, mk_iommu(), kv_bytes_per_token=1024,
+                        compute_per_token=10.0, soc=SOC, dram_latency=200)
+
+
+def test_well_formed_trace_replays():
+    per_step = replay([
+        ("map", [0, 1, 2]),                      # short form
+        ("map", [3, 4], 1, [3, 4]),              # extended form
+        ("step", [(0, 0, 0), (1, 0, 3)], 2),
+        ("unmap", 0, 3),
+        ("step", [(1, 1, 4)], 1),
+    ])
+    assert len(per_step) == 2
+    assert all(cycles > 0 for _, cycles in per_step)
+
+
+@pytest.mark.parametrize("bad", [
+    ("map",),                     # missing pages
+    ("map", [0], 1),              # extended form missing the table row
+    ("step", [(0, 0)], 1),        # access pair, not (slot, lp, phys)
+    ("step", 5, 1),               # accesses not a sequence
+    ("step", [(0, 0, 0)], "2"),   # tokens not a number
+    ("unmap", 0),                 # missing n_pages
+    ("unmap", "slot0", 3),        # slot not an int
+    ("teardown", 0, 3),           # unknown event kind
+    "unmap",                      # event not a tuple
+    (),                           # empty event
+])
+def test_malformed_event_raises_named_error(bad):
+    trace = [("map", [0, 1, 2]), bad]
+    with pytest.raises(TraceFormatError) as ei:
+        replay(trace)
+    err = ei.value
+    assert err.index == 1                   # names the offending event
+    assert "trace event 1" in str(err)
+    assert "expected" in str(err)
+
+
+def test_error_carries_expected_shape():
+    with pytest.raises(TraceFormatError) as ei:
+        replay([("unmap", 0)])
+    assert '("unmap", slot, n_pages)' in ei.value.expected
+
+
+def test_malformed_access_deep_in_step_names_event_index():
+    trace = [("map", [0, 1]),
+             ("step", [(0, 0, 0)], 1),
+             ("step", [(0, 0, 0), (0, 1)], 2)]   # second access malformed
+    with pytest.raises(TraceFormatError) as ei:
+        replay(trace)
+    assert ei.value.index == 2

@@ -1,0 +1,525 @@
+"""svalint — repo-specific static analysis for the paged SVA stack.
+
+The generic linters (ruff/mypy, run next to this in CI) know nothing about
+THIS repo's invariants: one ``TranslationCache`` owner, a refcount-disciplined
+page pool, a stats schema that must match ARCHITECTURE.md, jit-cache-key
+hygiene in the serving hot path, and documented benchmark flags. svalint
+checks exactly those, over the AST (no regex-on-source false positives) plus
+two project-level cross-checks against the docs.
+
+Rules (catalog with rationale in ARCHITECTURE.md):
+
+  R001  no module outside src/repro/core/sva/iommu.py constructs a raw
+        TranslationCache or touches its private state — the IOMMU front-end
+        is the single owner (tests/test_iommu.py delegates here)
+  R002  no raw PagePool refcount mutation (.alloc/.free/.share on a pool)
+        or private-state access (._free/._ref) outside the SVA ownership
+        layer; in the serving engine only ``_apply_cow`` may touch pool
+        state (tests/ are exempt: they drive the pool API to test it)
+  R003  every stats key emitted by stats()/as_dict()/stats_dict() in
+        core/sva/ appears in ARCHITECTURE.md's "## Stats schema" section,
+        and vice versa (docs-drift detector, both directions)
+  R004  jit hazards in core/serving/ and kernels/: host materialization of
+        traced values (.item(), int()/float()/bool() on non-static values,
+        np.asarray/np.array) inside jit-traced functions, unhashable
+        list/set/dict literals passed as static args, and shape-dependent
+        Python branching (non-guard) that defeats the padded-bucket jit
+        cache
+  R005  every argparse ``--flag`` defined in benchmarks/*.py and
+        examples/serve_paged.py is mentioned in README.md or
+        benchmarks/README.md
+
+Use as a CLI (``python -m tools.svalint src tests benchmarks``) or as a
+library (``lint_sources({relpath: text, ...})`` — how the fixture tests in
+tests/test_svalint.py feed minimal violations). Per-line suppression:
+``# svalint: disable=R002`` (comma-separate for several rules).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES = ("R001", "R002", "R003", "R004", "R005")
+
+#: files the CLI always loads for the project-level rules
+DOC_FILES = ("ARCHITECTURE.md", "README.md", "benchmarks/README.md")
+
+_SUPPRESS_RE = re.compile(r"#\s*svalint:\s*disable=([A-Z0-9,\s]+)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.msg}"
+
+
+def _parse(path: str, text: str) -> Optional[ast.Module]:
+    try:
+        return ast.parse(text, filename=path)
+    except SyntaxError:
+        return None
+
+
+def _terminal_name(node: ast.AST) -> str:
+    """Rightmost identifier of a Name/Attribute/Subscript chain
+    (``self.pools[slot]`` -> ``pools``)."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+# --------------------------------------------------------------------- R001
+
+#: private TranslationCache state (unique to tlb.py's implementation)
+_TLB_INTERNALS = {"_sets", "_set0", "_freq", "_meta", "_bump_gdsfs",
+                  "_set_index"}
+
+#: the single module allowed to construct a TranslationCache (plus the
+#: defining module itself)
+_R001_ALLOWED = ("src/repro/core/sva/iommu.py", "src/repro/core/sva/tlb.py")
+
+
+def _r001(path: str, tree: ast.Module) -> List[Finding]:
+    if path in _R001_ALLOWED:
+        return []
+    # White-box tests may INSPECT internals (per-set occupancy bounds);
+    # construction stays banned everywhere.
+    check_internals = not path.startswith("tests/")
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                _terminal_name(node.func) == "TranslationCache":
+            out.append(Finding(
+                path, node.lineno, "R001",
+                "raw TranslationCache construction outside the IOMMU "
+                "front-end (go through IOMMU(...).tlb / TLBConfig)"))
+        elif check_internals and isinstance(node, ast.Attribute) and \
+                node.attr in _TLB_INTERNALS:
+            out.append(Finding(
+                path, node.lineno, "R001",
+                f"access to TranslationCache internal '{node.attr}' "
+                "outside core/sva/iommu.py"))
+    return out
+
+
+# --------------------------------------------------------------------- R002
+
+_POOL_INTERNALS = {"_free", "_ref"}
+_POOL_MUTATORS = {"alloc", "free", "share"}
+_R002_ALLOWED = ("src/repro/core/sva/page_pool.py",
+                 "src/repro/core/sva/kv_manager.py",
+                 "src/repro/core/sva/mapping.py",
+                 "src/repro/core/sva/sanitizer.py")
+_R002_ENGINE = "src/repro/core/serving/engine.py"
+
+
+def _enclosing_functions(tree: ast.Module) -> Dict[int, str]:
+    """Map line number -> name of the innermost enclosing function."""
+    spans: List[Tuple[int, int, str]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            end = getattr(node, "end_lineno", node.lineno)
+            spans.append((node.lineno, end, node.name))
+    spans.sort(key=lambda s: s[1] - s[0])        # innermost first
+    out: Dict[int, str] = {}
+    for lo, hi, name in reversed(spans):
+        for ln in range(lo, hi + 1):
+            out[ln] = name
+    return out
+
+
+def _r002(path: str, tree: ast.Module) -> List[Finding]:
+    if path in _R002_ALLOWED or path.startswith("tests/"):
+        return []
+    in_engine = path == _R002_ENGINE
+    funcs = _enclosing_functions(tree) if in_engine else {}
+    out = []
+    for node in ast.walk(tree):
+        if in_engine and funcs.get(node.lineno if hasattr(node, "lineno")
+                                   else -1) == "_apply_cow":
+            continue                              # the sanctioned CoW path
+        if isinstance(node, ast.Attribute) and \
+                node.attr in _POOL_INTERNALS and \
+                "pool" in _terminal_name(node.value).lower():
+            out.append(Finding(
+                path, node.lineno, "R002",
+                f"access to PagePool internal '{node.attr}' outside "
+                "core/sva/page_pool.py"))
+        elif isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _POOL_MUTATORS and \
+                "pool" in _terminal_name(node.func.value).lower():
+            out.append(Finding(
+                path, node.lineno, "R002",
+                f"raw page-pool mutation '.{node.func.attr}()' outside "
+                "PagedKVManager / the engine's _apply_cow path"))
+    return out
+
+
+# --------------------------------------------------------------------- R003
+
+_STATS_FUNCS = {"stats", "as_dict", "stats_dict"}
+_R003_SCOPE = "src/repro/core/sva/"
+_SCHEMA_HEADER = "## Stats schema"
+
+
+def _emitted_stats_keys(sources: Dict[str, str]
+                        ) -> Dict[str, Tuple[str, int]]:
+    """Key -> (file, line) for every stats key emitted in core/sva/."""
+    keys: Dict[str, Tuple[str, int]] = {}
+    for path, text in sources.items():
+        if not (path.startswith(_R003_SCOPE) and path.endswith(".py")):
+            continue
+        tree = _parse(path, text)
+        if tree is None:
+            continue
+        for fn in ast.walk(tree):
+            if not (isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and fn.name in _STATS_FUNCS):
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Dict):
+                    for k in node.keys:
+                        if isinstance(k, ast.Constant) and \
+                                isinstance(k.value, str):
+                            keys.setdefault(k.value, (path, k.lineno))
+                elif isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Name) and \
+                        node.func.id == "dict":
+                    for kw in node.keywords:
+                        if kw.arg:
+                            keys.setdefault(kw.arg, (path, node.lineno))
+                elif isinstance(node, ast.Assign):
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Subscript) and \
+                                isinstance(tgt.slice, ast.Constant) and \
+                                isinstance(tgt.slice.value, str):
+                            keys.setdefault(tgt.slice.value,
+                                            (path, tgt.lineno))
+    return keys
+
+
+def _documented_stats_keys(arch: str) -> Optional[Set[str]]:
+    """Keys named in ARCHITECTURE.md's stats-schema code fences.
+
+    Format contract (see that section): keys are bare identifiers followed
+    by ``:`` or listed inside ``{...}``; prose/value descriptions live in
+    ``<...>`` or ``#`` comments, which are stripped before tokenizing."""
+    lines = arch.splitlines()
+    try:
+        start = next(i for i, l in enumerate(lines)
+                     if l.strip() == _SCHEMA_HEADER)
+    except StopIteration:
+        return None
+    body: List[str] = []
+    for l in lines[start + 1:]:
+        if l.startswith("## "):
+            break
+        body.append(l)
+    fences = re.findall(r"```(.*?)```", "\n".join(body), flags=re.S)
+    keys: Set[str] = set()
+    for block in fences:
+        block = re.sub(r"#[^\n]*", " ", block)
+        block = re.sub(r"<[^>]*>", " ", block)
+        keys.update(re.findall(r"[A-Za-z_][A-Za-z0-9_]*", block))
+    return keys
+
+
+def _r003(sources: Dict[str, str]) -> List[Finding]:
+    arch = sources.get("ARCHITECTURE.md")
+    if arch is None:
+        return []
+    emitted = _emitted_stats_keys(sources)
+    if not emitted:
+        return []
+    documented = _documented_stats_keys(arch)
+    if documented is None:
+        return [Finding("ARCHITECTURE.md", 1, "R003",
+                        f"missing '{_SCHEMA_HEADER}' section (the stats "
+                        "schema contract has no home)")]
+    out = []
+    for key in sorted(set(emitted) - documented):
+        path, line = emitted[key]
+        out.append(Finding(
+            path, line, "R003",
+            f"stats key '{key}' is emitted but not documented in "
+            f"ARCHITECTURE.md's '{_SCHEMA_HEADER}' section"))
+    for key in sorted(documented - set(emitted)):
+        out.append(Finding(
+            "ARCHITECTURE.md", 1, "R003",
+            f"stats key '{key}' is documented in '{_SCHEMA_HEADER}' but "
+            "no core/sva/ stats()/as_dict() emits it"))
+    return out
+
+
+# --------------------------------------------------------------------- R004
+
+_R004_SCOPES = ("src/repro/core/serving/", "src/repro/kernels/")
+_HOST_CASTS = {"int", "float", "bool"}
+_NP_NAMES = {"np", "numpy", "onp"}
+_NP_HOST = {"asarray", "array"}
+_STATIC_SAFE = {"shape", "ndim", "size", "dtype"}
+_UNHASHABLE = (ast.List, ast.Set, ast.Dict, ast.ListComp, ast.SetComp,
+               ast.DictComp, ast.GeneratorExp)
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """True for ``jax.jit`` / ``jit`` and ``(functools.)partial(jax.jit,
+    ...)`` expressions."""
+    if isinstance(node, ast.Call):
+        if _terminal_name(node.func) == "partial" and node.args:
+            return _is_jit_expr(node.args[0])
+        return _is_jit_expr(node.func)
+    return _terminal_name(node) == "jit"
+
+
+def _static_names_of(call: ast.Call) -> Set[str]:
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+    return names
+
+
+def _contains_static_marker(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_SAFE:
+            return True
+        if isinstance(n, ast.Call) and _terminal_name(n.func) == "len":
+            return True
+    return False
+
+
+def _r004(path: str, tree: ast.Module) -> List[Finding]:
+    if not any(path.startswith(s) for s in _R004_SCOPES):
+        return []
+    # Only module-level defs and class methods are resolvable call targets;
+    # defs nested inside a function (the engine's `walk` tree-walkers) are
+    # scanned as part of their parent's body, never as independent names —
+    # registering them would alias unrelated helpers that share a name.
+    funcs: Dict[str, ast.AST] = {}
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            funcs.setdefault(node.name, node)
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    funcs.setdefault(sub.name, sub)
+
+    jitted: Set[str] = set()
+    static_args: Dict[str, Set[str]] = {}
+    for name, node in funcs.items():
+        for dec in node.decorator_list:
+            if _is_jit_expr(dec):
+                jitted.add(name)
+                if isinstance(dec, ast.Call):
+                    static_args.setdefault(name, set()).update(
+                        _static_names_of(dec))
+    for node in ast.walk(tree):
+        # jax.jit(self._fn, ...) references mark the wrapped def as traced
+        if isinstance(node, ast.Call) and _is_jit_expr(node.func) and \
+                node.args:
+            tgt = _terminal_name(node.args[0])
+            if tgt in funcs:
+                jitted.add(tgt)
+                static_args.setdefault(tgt, set()).update(
+                    _static_names_of(node))
+
+    # transitive closure over same-module calls (helpers called from a
+    # jit-traced function are traced too)
+    changed = True
+    while changed:
+        changed = False
+        for name in list(jitted):
+            for node in ast.walk(funcs[name]):
+                if isinstance(node, ast.Call):
+                    callee = _terminal_name(node.func)
+                    if callee in funcs and callee not in jitted:
+                        jitted.add(callee)
+                        changed = True
+
+    out: List[Finding] = []
+    for name in sorted(jitted):
+        fn = funcs[name]
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "item":
+                    out.append(Finding(
+                        path, node.lineno, "R004",
+                        f".item() in jit-traced '{name}' materializes a "
+                        "traced value on the host"))
+                elif isinstance(node.func, ast.Name) and \
+                        node.func.id in _HOST_CASTS and node.args:
+                    arg = node.args[0]
+                    if not isinstance(arg, ast.Constant) and \
+                            not _contains_static_marker(arg):
+                        out.append(Finding(
+                            path, node.lineno, "R004",
+                            f"{node.func.id}() on a (possibly traced) "
+                            f"value in jit-traced '{name}' — static "
+                            "shape/len() derivations are fine, traced "
+                            "values are a TracerConversionError"))
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in _NP_HOST and \
+                        _terminal_name(node.func.value) in _NP_NAMES:
+                    out.append(Finding(
+                        path, node.lineno, "R004",
+                        f"np.{node.func.attr}() in jit-traced '{name}' "
+                        "forces a host copy of a traced value"))
+            elif isinstance(node, (ast.If, ast.While)):
+                if _shape_branch(node.test) and not _is_guard(node):
+                    out.append(Finding(
+                        path, node.lineno, "R004",
+                        f"shape-dependent Python branch in jit-traced "
+                        f"'{name}' retraces per shape and defeats the "
+                        "padded-bucket jit cache (raise-only guards are "
+                        "exempt)"))
+            elif isinstance(node, ast.IfExp) and _shape_branch(node.test):
+                out.append(Finding(
+                    path, node.lineno, "R004",
+                    f"shape-dependent conditional expression in "
+                    f"jit-traced '{name}' defeats the padded-bucket jit "
+                    "cache"))
+
+    # unhashable static args at call sites of jit-wrapped callables
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _terminal_name(node.func)
+        statics = static_args.get(callee)
+        if not statics:
+            continue
+        for kw in node.keywords:
+            if kw.arg in statics and isinstance(kw.value, _UNHASHABLE):
+                out.append(Finding(
+                    path, node.lineno, "R004",
+                    f"unhashable {type(kw.value).__name__.lower()} passed "
+                    f"as static arg '{kw.arg}' of jitted '{callee}' — "
+                    "static args key the jit cache and must be hashable "
+                    "(use a tuple)"))
+    return out
+
+
+def _shape_branch(test: ast.AST) -> bool:
+    return any(isinstance(n, ast.Attribute) and n.attr == "shape"
+               for n in ast.walk(test))
+
+
+def _is_guard(node: ast.AST) -> bool:
+    """True for trace-time validation: every branch body is a bare raise."""
+    bodies = list(node.body) + list(getattr(node, "orelse", []))
+    return all(isinstance(s, ast.Raise) for s in bodies)
+
+
+# --------------------------------------------------------------------- R005
+
+_R005_READMES = ("README.md", "benchmarks/README.md")
+
+
+def _r005(sources: Dict[str, str]) -> List[Finding]:
+    docs = [sources[p] for p in _R005_READMES if p in sources]
+    if not docs:
+        return []
+    out = []
+    for path, text in sorted(sources.items()):
+        if not (path.endswith(".py") and
+                (path.startswith("benchmarks/") or
+                 path == "examples/serve_paged.py")):
+            continue
+        tree = _parse(path, text)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "add_argument" and node.args and \
+                    isinstance(node.args[0], ast.Constant) and \
+                    isinstance(node.args[0].value, str) and \
+                    node.args[0].value.startswith("--"):
+                flag = node.args[0].value
+                if not any(flag in d for d in docs):
+                    out.append(Finding(
+                        path, node.lineno, "R005",
+                        f"flag '{flag}' is not mentioned in README.md or "
+                        "benchmarks/README.md"))
+    return out
+
+
+# ------------------------------------------------------------------- driver
+
+def _suppressed(sources: Dict[str, str], f: Finding) -> bool:
+    text = sources.get(f.path)
+    if text is None:
+        return False
+    lines = text.splitlines()
+    if not 1 <= f.line <= len(lines):
+        return False
+    m = _SUPPRESS_RE.search(lines[f.line - 1])
+    return bool(m) and f.rule in {r.strip() for r in m.group(1).split(",")}
+
+
+def lint_sources(sources: Dict[str, str],
+                 rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run svalint over in-memory sources: {repo-relative path: text}.
+    Include ARCHITECTURE.md / README.md / benchmarks/README.md entries for
+    the project-level rules (R003, R005) to run."""
+    active = set(rules or RULES)
+    findings: List[Finding] = []
+    for path, text in sorted(sources.items()):
+        if not path.endswith(".py"):
+            continue
+        tree = _parse(path, text)
+        if tree is None:
+            continue
+        if "R001" in active:
+            findings += _r001(path, tree)
+        if "R002" in active:
+            findings += _r002(path, tree)
+        if "R004" in active:
+            findings += _r004(path, tree)
+    if "R003" in active:
+        findings += _r003(sources)
+    if "R005" in active:
+        findings += _r005(sources)
+    findings = [f for f in findings if not _suppressed(sources, f)]
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def load_tree(root, paths: Iterable[str]) -> Dict[str, str]:
+    """Read every .py under ``paths`` (plus the doc files) into the
+    {relpath: text} mapping ``lint_sources`` consumes."""
+    from pathlib import Path
+    root = Path(root)
+    sources: Dict[str, str] = {}
+    for rel in paths:
+        p = root / rel
+        files = [p] if p.is_file() else sorted(p.rglob("*.py"))
+        for f in files:
+            if f.suffix == ".py":
+                sources[f.relative_to(root).as_posix()] = \
+                    f.read_text(encoding="utf-8")
+    for doc in DOC_FILES:
+        f = root / doc
+        if f.is_file():
+            sources[doc] = f.read_text(encoding="utf-8")
+    return sources
+
+
+def lint_paths(root, paths: Iterable[str],
+               rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    return lint_sources(load_tree(root, paths), rules=rules)

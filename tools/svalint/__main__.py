@@ -1,0 +1,37 @@
+"""CLI: ``python -m tools.svalint [paths...]`` from the repo root.
+
+Exits 1 when any rule fires; 0 on a clean tree. Default paths cover
+everything the rules scope to."""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.svalint import RULES, lint_paths
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "examples")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="svalint", description="repo-specific SVA-stack lint")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="paths (relative to the repo root) to lint")
+    ap.add_argument("--rules", default=",".join(RULES),
+                    help="comma-separated rule ids to run")
+    args = ap.parse_args(argv)
+    root = Path(__file__).resolve().parents[2]
+    findings = lint_paths(root, args.paths,
+                          rules=[r.strip() for r in args.rules.split(",")])
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"svalint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("svalint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
