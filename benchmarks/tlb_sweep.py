@@ -2,10 +2,12 @@
 static grid + adaptive front-end rows.
 
 Records real serving translation traces (``ServingEngine(
-record_translation_trace=True)``) for two deployment profiles — a
-prefix-heavy mix (shared system prompt, CoW divergence) and an all-unique
-mix (no cross-request reuse) — then replays each trace through the unified
-IOMMU front-end across a grid of hardware geometries:
+record_translation_trace=True)``) for three deployment profiles — a
+prefix-heavy mix (shared system prompt, CoW divergence), an all-unique
+mix (no cross-request reuse), and a continuous-batching mix served over an
+oversubscribed page pool (its trace bears preempt/resume events around
+real ASID teardown/re-mapping) — then replays each trace through the
+unified IOMMU front-end across a grid of hardware geometries:
 
   IOTLB entries x set associativity (ways) x replacement policy
   x walk-cache size (non-leaf Sv39 PTE cache)
@@ -105,10 +107,16 @@ def sweep_grid(smoke: bool = False) -> List[Geometry]:
 # --------------------------------------------------------------- recording
 
 def record_traces(dry_run: bool = False) -> Tuple[Dict[str, list], dict]:
-    """Serve two deployment profiles with translation tracing ON. Returns
-    ({deployment: trace}, cost model constants for the replay)."""
+    """Serve three deployment profiles with translation tracing ON. Returns
+    ({deployment: trace}, cost model constants for the replay). The
+    ``continuous`` profile serves through the continuous-batching scheduler
+    over an oversubscribed page pool, so its trace bears
+    ``("preempt", ...)`` / ``("resume", ...)`` annotations around real ASID
+    teardown/re-mapping — the replay path is exercised on preemption-bearing
+    traces even at ``--smoke`` scale."""
     # Lazy: recording needs jax + the serving engine; replay does not.
-    from benchmarks.paged_serving import (_cfg_params,  # noqa: PLC0415
+    from benchmarks.paged_serving import (_BURST_POOL,  # noqa: PLC0415
+                                          _cfg_params,
                                           _prefix_heavy_prompts)
     from repro.core.serving.engine import ServingEngine  # noqa: PLC0415
 
@@ -116,9 +124,9 @@ def record_traces(dry_run: bool = False) -> Tuple[Dict[str, list], dict]:
     cfg, params = _cfg_params()
     soc = PaperSoCConfig()
 
-    def serve(prompts):
+    def serve(prompts, **engine_kw):
         eng = ServingEngine(cfg, params, n_slots=4, max_len=64, page_size=8,
-                            record_translation_trace=True)
+                            record_translation_trace=True, **engine_kw)
         for p in prompts:
             eng.submit(p, max_tokens=max_tokens)
         eng.run()
@@ -130,13 +138,16 @@ def record_traces(dry_run: bool = False) -> Tuple[Dict[str, list], dict]:
                            size=int(rng.integers(8, 30))).tolist()
               for _ in range(n_req)]
     _, unique_trace = serve(unique)
+    _, cont_trace = serve(_prefix_heavy_prompts(n_req, cfg.vocab_size),
+                          scheduler="continuous", pool_pages=_BURST_POOL)
 
     n_attn = sum(1 for k in cfg.layer_kinds() if "attn" in k)
     consts = dict(
         kv_bytes_per_token=eng.mgr.kv_bytes_per_token,
         # decode attention: ~4 flops per KV token per head-dim per layer
         compute_per_token=4 * cfg.n_heads * cfg.d_head * n_attn / soc.n_pes)
-    return {"prefix_heavy": prefix_trace, "unique": unique_trace}, consts
+    return {"prefix_heavy": prefix_trace, "unique": unique_trace,
+            "continuous": cont_trace}, consts
 
 
 # ----------------------------------------------------------------- replay
@@ -243,8 +254,9 @@ def run(smoke: bool = False, out: str = "tlb_sweep.csv",
     adaptive: Dict[str, List[dict]] = {}
     for dep, trace in traces.items():
         n_steps = sum(1 for ev in trace if ev[0] == "step")
+        n_pre = sum(1 for ev in trace if ev[0] == "preempt")
         rows.append(f"tlb_sweep.trace.{dep},{n_steps},decode steps recorded "
-                    f"({len(trace)} events)")
+                    f"({len(trace)} events; preempts={n_pre})")
         results[dep] = []
         for geom in grid:
             r = replay_geometry(trace, geom, dram_latency=dram_latency,

@@ -21,6 +21,14 @@ Trace events (recorded by ``ServingEngine(record_translation_trace=True)``):
   ("unmap", slot, n_pages)      release: per-ASID self-invalidation (TLB
                                 entries + prefetcher state die with the
                                 slot, mirroring the live engine's detach)
+  ("preempt", seq_id)           scheduler preempted a sequence under pool
+                                pressure. Annotation only: the translation
+                                consequences ride the paired "unmap" the
+                                engine emits right after (ASID teardown).
+  ("resume", seq_id, pages)     the sequence was re-admitted onto ``pages``.
+                                Annotation only: the paired "map" carries
+                                the new mapping. Both keep preemption-
+                                bearing traces replayable and countable.
 
 Events are shape-checked on replay: a malformed event raises
 :class:`TraceFormatError` naming the event index and the expected shape
@@ -64,26 +72,38 @@ _EVENT_SHAPES = {
     "step": '("step", accesses, tokens) with accesses a sequence of '
             '(slot, lp, phys) triples',
     "unmap": '("unmap", slot, n_pages)',
+    "preempt": '("preempt", seq_id)',
+    "resume": '("resume", seq_id, pages)',
 }
 
 
 def _validate_event(i: int, ev) -> str:
-    """Shape-check one trace event; returns its kind ("map"/"step"/"unmap")
-    or raises :class:`TraceFormatError` naming the event index."""
+    """Shape-check one trace event; returns its kind (a key of
+    ``_EVENT_SHAPES``) or raises :class:`TraceFormatError` naming the
+    event index (and, for an unknown kind, the offending tag)."""
     if not isinstance(ev, (tuple, list)) or not ev:
         raise TraceFormatError(
             i, ev, "a non-empty tuple " + " / ".join(_EVENT_SHAPES.values()))
     kind = ev[0]
     if kind not in _EVENT_SHAPES:
+        # NAME the offending tag: "teardown" vs "unmap" should read as a
+        # tag problem at a glance, not send the user diffing shape docs.
         raise TraceFormatError(
-            i, ev, 'event kind "map" | "step" | "unmap", one of: '
-            + " / ".join(_EVENT_SHAPES.values()))
+            i, ev, f'a known event kind (got unknown tag {kind!r}); '
+            'expected one of: ' + " / ".join(_EVENT_SHAPES.values()))
     if kind == "map":
         if len(ev) not in (2, 4) or isinstance(ev[1], (str, int, float)):
             raise TraceFormatError(i, ev, _EVENT_SHAPES["map"])
     elif kind == "unmap":
         if len(ev) != 3 or not all(isinstance(x, int) for x in ev[1:]):
             raise TraceFormatError(i, ev, _EVENT_SHAPES["unmap"])
+    elif kind == "preempt":
+        if len(ev) != 2 or not isinstance(ev[1], int):
+            raise TraceFormatError(i, ev, _EVENT_SHAPES["preempt"])
+    elif kind == "resume":
+        if (len(ev) != 3 or not isinstance(ev[1], int)
+                or isinstance(ev[2], (str, int, float))):
+            raise TraceFormatError(i, ev, _EVENT_SHAPES["resume"])
     else:  # step
         if (len(ev) != 3 or isinstance(ev[1], (str, int, float))
                 or not isinstance(ev[2], (int, float))):
@@ -136,6 +156,12 @@ def replay_trace(trace, iommu: IOMMU, kv_bytes_per_token: int,
             if sp is not None:
                 sp.table.clear()        # released: the prefetcher must not
                                         # resolve through a dead mapping
+        elif kind in ("preempt", "resume"):
+            # Annotations: the scheduler emits the translation-visible
+            # consequences as the paired "unmap" (ASID teardown on
+            # preempt) and "map" (fresh mapping on resume) events, so
+            # replay only needs to validate and count them.
+            continue
         else:
             _, accesses, tokens = ev
             ptw = 0.0

@@ -11,6 +11,15 @@ CoW-duplicate it on their first divergent token.
   PYTHONPATH=src python examples/serve_paged.py
   PYTHONPATH=src python examples/serve_paged.py --tlb-prefetch stream \
       --tlb-autotune 4
+  PYTHONPATH=src python examples/serve_paged.py --scheduler continuous
+
+``--scheduler continuous`` switches to the token-budget continuous-batching
+scheduler and serves the same requests as two bursty arrival waves over an
+OVERSUBSCRIBED page pool (``--pool-pages``): admission is lazy (prompt
+pages only), prompts prefill in chunks inside mixed decode steps, and pool
+pressure is resolved by preempting the newest sequence (its KV goes warm
+into the prefix cache; resume re-matches it) — watch the preemptions /
+resumes / steps-to-first-token lines.
 """
 import argparse
 import dataclasses
@@ -44,6 +53,15 @@ ap.add_argument("--tlb-autotune", type=int, default=0, metavar="STEPS",
                 help="auto-tune the serving TLB geometry online with this "
                      "measurement window in decode steps "
                      "(ModelConfig.serve_tlb_autotune; 0 = off)")
+ap.add_argument("--scheduler", default="fixed",
+                choices=("fixed", "continuous"),
+                help="continuous = token-budget scheduling with chunked "
+                     "prefill and preempt/resume, demoed as two bursty "
+                     "arrival waves over an oversubscribed pool")
+ap.add_argument("--pool-pages", type=int, default=0,
+                help="physical KV page pool size (0 = full n_slots*pages "
+                     "reservation; --scheduler continuous defaults to an "
+                     "oversubscribed 16-page pool so preemption fires)")
 args = ap.parse_args()
 
 cfg = reduce_for_smoke(get_config("qwen2-7b"))
@@ -57,22 +75,39 @@ cfg = dataclasses.replace(
     # differentiate within a short example run.
     serve_tlb_entries=64 if args.tlb_autotune else cfg.serve_tlb_entries)
 params = init_params(cfg, jax.random.key(0))
+pool_pages = args.pool_pages \
+    or (16 if args.scheduler == "continuous" else 0)
 eng = ServingEngine(cfg, params, n_slots=4, max_len=128, page_size=8,
                     offload_mode="zero_copy",
+                    scheduler=args.scheduler,
+                    pool_pages=pool_pages or None,
                     translation_stats=True)   # live IOTLB hit/miss counting
 
 rng = np.random.default_rng(0)
 system = rng.integers(0, cfg.vocab_size, size=16).tolist()  # shared prefix
-print("submitting 10 requests into 4 slots (continuous batching; "
-      "8 share a system prompt, 2 are exact duplicates)...")
 prompts = [system + rng.integers(0, cfg.vocab_size,
                                  size=rng.integers(2, 8)).tolist()
            for _ in range(7)]
 prompts.append(list(prompts[1]))                 # exact duplicate
 prompts += [rng.integers(0, cfg.vocab_size, size=12).tolist()
             for _ in range(2)]                   # unrelated
-rids = [eng.submit(p, max_tokens=10) for p in prompts]
-done = eng.run()
+if args.scheduler == "continuous":
+    print(f"two bursty arrival waves of 10 requests over an oversubscribed "
+          f"{eng.mgr.pool.n_pages}-page pool (lazy admission, chunked "
+          "prefill, preempt/resume under pressure)...")
+    finished = {}
+    # Longer generations than the fixed demo: decode growth (one page per
+    # 8 tokens per sequence) is what oversubscribes the pool.
+    rids = [eng.submit(p, max_tokens=24) for p in prompts[:6]]
+    for _ in range(3):                           # burst 2 lands mid-serve
+        eng.step(finished)
+    rids += [eng.submit(p, max_tokens=24) for p in prompts[6:]]
+    done = {**finished, **eng.run()}
+else:
+    print("submitting 10 requests into 4 slots (continuous batching; "
+          "8 share a system prompt, 2 are exact duplicates)...")
+    rids = [eng.submit(p, max_tokens=10) for p in prompts]
+    done = eng.run()
 for rid in rids[:4]:
     r = done[rid]
     print(f"  req {rid}: ttft {(r.first_token_at-r.submitted_at)*1e3:6.0f}ms "
@@ -90,6 +125,12 @@ if "autotune" in s["iommu"]:
           f"windows={at['windows']} -> current geometry "
           f"e{s['iommu']['tlb_entries']}.w{s['iommu']['tlb_ways']}."
           f"{s['iommu']['tlb_policy']} (explored: {at['explored']})")
+if args.scheduler == "continuous":
+    sc = s["sched"]
+    ttft = [done[r].first_token_step - done[r].submitted_step for r in rids]
+    print(f"scheduler: preemptions={sc['preemptions']} "
+          f"resumes={sc['resumes']}; steps-to-first-token "
+          f"mean={np.mean(ttft):.1f} max={max(ttft)}")
 print(f"prefix cache: {s['prefix']}")
 print(f"prefill tokens saved: {s['prefill_tokens_saved']} "
       f"(shared admissions: {s['shared_admissions']}); "

@@ -104,6 +104,16 @@ class ModelConfig:
     # the size-aware score (frequency x covered-tokens / page-span).
     prefix_cache_policy: str = "lru"        # lru | lfu | gdsfs
     prefix_cache_pages: int = 0
+    # Online prefix-cache cap tuning: window length in decode steps after
+    # which the cap shrinks/grows from live pool pressure (free-page
+    # headroom vs eviction-vs-reuse rates). 0 = off (static cap above).
+    prefix_cache_autotune: int = 0
+    # Continuous-batching scheduler (core/serving/scheduler.py):
+    # per-step token budget for the mixed decode+chunked-prefill batch and
+    # the per-sequence prefill chunk cap. Used when the engine runs with
+    # scheduler="continuous"; validated here so every entry point agrees.
+    sched_token_budget: int = 256
+    sched_prefill_chunk: int = 64
     # Serving-side translation front-end geometry: the delta-upload cache
     # the PagedKVManager runs decode page gathers through (same
     # TranslationCache as the simulator's hardware IOTLB; tuned per
@@ -144,6 +154,19 @@ class ModelConfig:
             raise ValueError(
                 f"{self.name}: prefix_cache_pages={self.prefix_cache_pages} "
                 "(must be >= 0; 0 = uncapped)")
+        if self.prefix_cache_autotune < 0:
+            raise ValueError(
+                f"{self.name}: prefix_cache_autotune="
+                f"{self.prefix_cache_autotune} "
+                "(window length in decode steps; 0 = off)")
+        if self.sched_token_budget < 1:
+            raise ValueError(
+                f"{self.name}: sched_token_budget={self.sched_token_budget} "
+                "(need >= 1)")
+        if self.sched_prefill_chunk < 1:
+            raise ValueError(
+                f"{self.name}: sched_prefill_chunk={self.sched_prefill_chunk} "
+                "(need >= 1)")
         if self.serve_tlb_policy not in ("lru", "fifo", "lfu", "random",
                                          "gdsfs"):
             raise ValueError(

@@ -63,6 +63,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.serving.scheduler import Scheduler, SchedulerOutput
+from repro.core.serving.sequence_buffer import SequenceBuffer
 from repro.core.sva.iommu import (AutoTuneConfig, PrefetchConfig, TLBConfig,
                                   default_autotune_candidates)
 from repro.core.sva.kv_manager import PagedKVManager
@@ -81,6 +83,10 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
+    # step-counter stamps (steps-to-first-token is the wall-clock-free
+    # latency proxy the benchmarks report)
+    submitted_step: Optional[int] = None
+    first_token_step: Optional[int] = None
 
 
 # ------------------------------------------------------------ cache walks
@@ -234,9 +240,15 @@ class ServingEngine:
                  prefix_sharing: bool = True,
                  decode_backend: Optional[str] = None,
                  record_translation_trace: bool = False,
-                 translation_stats: bool = False):
+                 translation_stats: bool = False,
+                 scheduler: str = "fixed",
+                 pool_pages: Optional[int] = None):
+        if scheduler not in ("fixed", "continuous"):
+            raise ValueError(f"scheduler={scheduler!r} "
+                             "(expected 'fixed' or 'continuous')")
         if decode_backend is not None:
             cfg = dataclasses.replace(cfg, decode_backend=decode_backend)
+        self.scheduler_mode = scheduler
         self.cfg, self.params, self.mi = cfg, params, mi
         self.n_slots, self.max_len, self.page_size = n_slots, max_len, page_size
         self.src_len = src_len
@@ -281,7 +293,9 @@ class ServingEngine:
                                   # None defers to REPRO_SVASAN (svasan)
                                   sanitize=True if cfg.svasan else None,
                                   tlb_prefetch=prefetch,
-                                  autotune=autotune)
+                                  autotune=autotune,
+                                  prefix_autotune=cfg.prefix_cache_autotune,
+                                  pool_pages=pool_pages)
         # Translation trace: ("map", fresh_pages) at admission (Listing-1
         # host map pass) and ("step", accesses, tokens_read) per decode step
         # — replayable through any IOMMU walk model (see
@@ -302,7 +316,11 @@ class ServingEngine:
                                    or prefetch.enabled)
         self.queue: deque = deque()
         self.active: Dict[int, Request] = {}
+        # Continuous mode: requests submitted or preempted but not currently
+        # holding a slot (their tokens live in the scheduler's waiting queue).
+        self._waiting_reqs: Dict[int, Request] = {}
         self._next_id = 0
+        self._step_count = 0
         # Recurrent layers (mamba/rwkv) scan left-to-right: right-padding
         # would corrupt their final states, so those archs prefill at exact
         # lengths (batching only same-length prompts).
@@ -332,6 +350,7 @@ class ServingEngine:
                                     donate_argnums=(2,))
             self._decode = jax.jit(self._decode_zero_copy,
                                    donate_argnums=(4,))
+            self._decode_m = jax.jit(self._decode_masked, donate_argnums=(5,))
             self._cow = jax.jit(self._cow_copy_pages, donate_argnums=(0,))
         else:
             if (cfg.sliding_window
@@ -353,34 +372,95 @@ class ServingEngine:
             self._prefill = jax.jit(
                 lambda p, b, c: forward_prefill(cfg, p, b, c, mi))
 
+        # Continuous-batching mode (core/serving/scheduler.py): dense
+        # SequenceBuffer state + a token-budget scheduler composing mixed
+        # decode/chunked-prefill steps, with preemption under pool
+        # pressure. Chunked prefill scatters through write_tables and reads
+        # earlier chunks back via the prefix path, so it needs every
+        # stateful layer in the shared global pool — the same constraint as
+        # prefix sharing, minus the sharing flag itself.
+        self.buffer: Optional[SequenceBuffer] = None
+        self.sched: Optional[Scheduler] = None
+        if scheduler == "continuous":
+            if offload_mode != "zero_copy":
+                raise NotImplementedError(
+                    "continuous scheduling requires offload_mode='zero_copy'")
+            if (self._exact_prefill or cfg.is_encdec or cfg.n_image_tokens
+                    or not all(k in share_kinds for k in cfg.layer_kinds())):
+                raise NotImplementedError(
+                    "continuous scheduling needs all KV state in the shared "
+                    "global pool (full-attention archs only): chunked "
+                    "prefill cannot reconstruct per-slot ring buffers, "
+                    "recurrent states, or cross-KV")
+            self.buffer = SequenceBuffer(n_slots,
+                                         self.max_pages * page_size)
+            self.sched = Scheduler(self.mgr, self.buffer,
+                                   cfg.sched_token_budget,
+                                   cfg.sched_prefill_chunk,
+                                   share_tokens=self._can_share,
+                                   on_event=self._trace_event)
+
     # --------------------------------------------------------------- API
     def submit(self, prompt: List[int], max_tokens: int = 16) -> int:
         self.mgr.ensure_fits(len(prompt), max_tokens)   # reject, never wrap
+        if self.sched is not None and not prompt:
+            raise ValueError("continuous scheduling needs a non-empty prompt")
         rid = self._next_id
         self._next_id += 1
         self.queue.append(Request(rid, list(prompt), max_tokens,
-                                  submitted_at=time.perf_counter()))
+                                  submitted_at=time.perf_counter(),
+                                  submitted_step=self._step_count))
         return rid
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active
+                    or (self.sched is not None and self.sched.has_work))
+
+    def step(self, finished: Dict[int, Request]) -> None:
+        """Run ONE engine step (admission + compute + completion harvest)
+        under the configured scheduler. Benchmarks drive this directly to
+        inject arrivals between steps; :meth:`run` is the closed loop."""
+        if self.sched is not None:
+            self._continuous_step()
+        else:
+            self._admit()
+            self._decode_step()
+        self._step_count += 1
+        self._release_done(finished)
 
     def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
         finished: Dict[int, Request] = {}
         steps = 0
-        while (self.queue or self.active) and steps < max_steps:
-            self._admit()
-            self._decode_step()
+        while self.has_work and steps < max_steps:
+            self.step(finished)
             steps += 1
-            for rid in [r for r, q in self.active.items()
-                        if self.mgr.seqs[r].done]:
-                req = self.active.pop(rid)
-                req.done_at = time.perf_counter()
-                st = self.mgr.seqs[rid]
-                req.out_tokens = st.tokens
-                if self.translation_trace is not None:
-                    self.translation_trace.append(
-                        ("unmap", st.slot, len(st.pages)))
-                self.mgr.release(rid)
-                finished[rid] = req
         return finished
+
+    def _release_done(self, finished: Dict[int, Request]) -> None:
+        for rid in [r for r, q in self.active.items()
+                    if self.mgr.seqs[r].done]:
+            req = self.active.pop(rid)
+            req.done_at = time.perf_counter()
+            st = self.mgr.seqs[rid]
+            if self.sched is not None:
+                # Generations preempted along the way were folded into
+                # out_tokens at preemption time; append the rest.
+                req.out_tokens.extend(st.tokens)
+                self.sched.finish(rid)
+            else:
+                req.out_tokens = st.tokens
+            if self.translation_trace is not None:
+                self.translation_trace.append(
+                    ("unmap", st.slot, len(st.pages)))
+            self.mgr.release(rid)
+            finished[rid] = req
+
+    def _trace_event(self, ev: tuple) -> None:
+        """Scheduler lifecycle events (map/unmap/preempt/resume) join the
+        translation trace in order, keeping it replayable."""
+        if self.translation_trace is not None:
+            self.translation_trace.append(ev)
 
     def invalidate_epoch(self) -> None:
         """Flush every device translation (paper Listing 1); the next decode
@@ -510,6 +590,7 @@ class ServingEngine:
             first = int(np.argmax(logits[i, -1]))
             self.mgr.append_token(req.req_id, first)
             req.first_token_at = now
+            req.first_token_step = self._step_count
         self.metrics["prefills"] += 1
         self.metrics["prefill_reqs"] += len(group)
         self.metrics["prefill_s"] += time.perf_counter() - t0
@@ -558,6 +639,7 @@ class ServingEngine:
         first = int(jnp.argmax(logits[0, -1]))
         self.mgr.append_token(req.req_id, first)
         req.first_token_at = time.perf_counter()
+        req.first_token_step = self._step_count
         self.metrics["prefills"] += 1
         self.metrics["prefill_reqs"] += 1
         self.metrics["prefill_s"] += time.perf_counter() - t0
@@ -681,6 +763,150 @@ class ServingEngine:
             if self.eos is not None and tok == self.eos:
                 st.done = True
         self.metrics["decode_steps"] += 1
+        self.mgr.observe_step()
+        self.metrics["decode_s"] += time.perf_counter() - t0
+
+    # ------------------------------------------------- continuous batching
+    def _continuous_step(self):
+        # Queued CoW copies must land BEFORE the scheduler can preempt: a
+        # preemption frees its sequence's pages, and a same-step resume or
+        # chunk prefill could recycle a pending copy's source page.
+        self._apply_cow()
+        while self.queue:
+            req = self.queue.popleft()
+            self.sched.submit(req.req_id, req.prompt, req.max_tokens)
+            self._waiting_reqs[req.req_id] = req
+        t0 = time.perf_counter()
+        out = self.sched.schedule()
+        self.metrics["admit_s"] += time.perf_counter() - t0
+        for sid, folded in out.preempted:
+            req = self.active.pop(sid)
+            req.out_tokens.extend(folded)
+            self._waiting_reqs[sid] = req
+        for sid in out.admitted + out.resumed:
+            self.active[sid] = self._waiting_reqs.pop(sid)
+        if out.chunks:
+            self._chunk_prefill(out.chunks)
+        self._decode_continuous(out)
+
+    def _chunk_prefill(self, chunks):
+        """One padded prefill call for this step's chunk spans — the
+        chunked-prefill counterpart of ``_batched_prefill``. Every chunk
+        runs the prefix path: ``prefix_lens`` positions earlier chunks'
+        (and shared prefixes') KV as context, and ``write_tables`` NULLs
+        every page before the chunk's own span — the scatter zero-scrubs
+        ALL non-NULL entries, so leaving an earlier chunk's page mapped
+        would erase its KV. Pages past the span are harmlessly re-scrubbed
+        (still unwritten). The final chunk's logits produce the first
+        token (or re-inject a preempted sequence's pending token)."""
+        t0 = time.perf_counter()
+        sufs = [c.end - c.start for c in chunks]
+        lb = self._bucket_len(max(sufs))
+        nb = 1
+        while nb < len(chunks):
+            nb *= 2
+        nb = max(min(nb, self.n_slots), len(chunks))
+        tokens = np.zeros((nb, lb), np.int32)
+        lengths = np.zeros((nb,), np.int32)
+        prefix = np.zeros((nb,), np.int32)
+        slots = np.full((nb,), self.n_slots, np.int32)  # OOB: scatter-dropped
+        tables = np.full((nb, self.max_pages), self.mgr.null_page, np.int32)
+        wtables = np.full((nb, self.max_pages), self.mgr.null_page, np.int32)
+        for i, c in enumerate(chunks):
+            st = self.mgr.seqs[c.seq_id]
+            tokens[i, :sufs[i]] = self.buffer.chunk_tokens(c.slot, c.start,
+                                                           c.end)
+            lengths[i] = sufs[i]
+            prefix[i] = c.start
+            slots[i] = c.slot
+            tables[i] = self.mgr.tables[c.slot]
+            wtables[i] = tables[i]
+            keep_from = max(st.shared_pages, c.start // self.page_size)
+            wtables[i, :keep_from] = self.mgr.null_page
+        self.metrics["admit_table_bytes"] += len(chunks) * self.max_pages * 4
+        batch = {"tokens": jnp.asarray(tokens),
+                 "lengths": jnp.asarray(lengths),
+                 "tables": jnp.asarray(tables),
+                 "slots": jnp.asarray(slots),
+                 "prefix_lens": jnp.asarray(prefix),
+                 "write_tables": jnp.asarray(wtables)}
+        logits, self.cache = self._prefill(self.params, batch, self.cache)
+        finals = [(i, c) for i, c in enumerate(chunks) if c.is_final]
+        if finals:
+            logits = np.asarray(logits)
+        now = time.perf_counter()
+        for i, c in enumerate(chunks):
+            self.buffer.advance(c.slot, c.end)
+            # Progressive prefix registration: the chunk's KV is resident
+            # NOW, so its pages may join the index (an eager registration
+            # at lazy admission would publish uncomputed pages).
+            self.mgr.register_progress(c.seq_id,
+                                       self.buffer.token_ids[c.slot], c.end)
+        for i, c in finals:
+            first = (c.pending if c.pending is not None
+                     else int(np.argmax(logits[i, -1])))
+            self.mgr.append_token(c.seq_id, first)
+            self.buffer.append(c.slot, first)
+            req = self.active[c.seq_id]
+            if req.first_token_at is None:
+                req.first_token_at = now
+                req.first_token_step = self._step_count
+        self.metrics["prefills"] += 1
+        self.metrics["prefill_reqs"] += len(finals)
+        self.metrics["prefill_s"] += time.perf_counter() - t0
+
+    def _decode_masked(self, params, tokens, kv_len, tables, mask, cache):
+        """Decode with non-decoding slots masked out: their table rows
+        become all-NULL (KV writes dropped, gathers read zero) and their
+        kv_len arrives pre-masked to 0, so a mid-prefill slot's pages are
+        never touched. Masked rows compute garbage logits that nothing
+        consumes — identical shapes every step, one jit trace."""
+        tables = jnp.where(mask[:, None], tables, self.null_page)
+        cache = _install_tables(cache, tables, kv_len)
+        return forward_decode(self.cfg, params, tokens, kv_len, cache,
+                              self.mi)
+
+    def _decode_continuous(self, out: SchedulerOutput):
+        t0 = time.perf_counter()
+        self._apply_cow()       # final-chunk first tokens may queue CoW
+        self._upload_tables()
+        if self._translation_stats and self.sched.running:
+            # Per-sequence resident-token counts: a decoding sequence
+            # gathers everything it has; a mid-prefill sequence only its
+            # computed chunks.
+            resident = {}
+            for sid in self.sched.running:
+                slot = self.buffer.slot_of(sid)
+                resident[sid] = (self.mgr.seqs[sid].length
+                                 if self.buffer.is_decoding(slot)
+                                 else int(self.buffer.n_computed[slot]))
+            accesses = self.mgr.translate_step(resident=resident)
+            if self.translation_trace is not None:
+                self.translation_trace.append(
+                    ("step", accesses, int(sum(resident.values()))))
+        if not out.decode_slots:
+            return
+        lengths = self.mgr.device_lengths()
+        mask = np.zeros((self.n_slots,), bool)
+        mask[out.decode_slots] = True
+        kv_len = np.where(mask, np.maximum(lengths - 1, 0), 0) \
+            .astype(np.int32)
+        last = np.where(mask, self.buffer.last_tokens(), 0) \
+            .astype(np.int32)[:, None]
+        logits, self.cache = self._decode_m(
+            self.params, jnp.asarray(last), jnp.asarray(kv_len),
+            self._tables_dev, jnp.asarray(mask), self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for slot in out.decode_slots:
+            sid = int(self.buffer.seq_ids[slot])
+            tok = int(nxt[slot])
+            self.mgr.append_token(sid, tok)
+            self.buffer.append(slot, tok)
+            self.metrics["tokens"] += 1
+            if self.eos is not None and tok == self.eos:
+                self.mgr.seqs[sid].done = True
+        self.metrics["decode_steps"] += 1
+        self.mgr.observe_step()
         self.metrics["decode_s"] += time.perf_counter() - t0
 
     def stats(self) -> dict:
@@ -694,4 +920,6 @@ class ServingEngine:
         if pf is not None:
             m["prefill_tokens_saved"] = pf["tokens_saved"]
             m["shared_admissions"] = pf["hits"]
+        if self.sched is not None:
+            m["sched"] = self.sched.stats()
         return {**m, **s}

@@ -320,14 +320,21 @@ class Sv39Walk:
         return (asid, level, vpn >> (9 * (self.levels - 1 - level)))
 
     def walk(self, asid: int, page: int,
-             vpn: Optional[int] = None) -> float:
+             vpn: Optional[int] = None,
+             wc_sink: Optional[list] = None) -> float:
         """One full page-table walk: up to ``levels`` sequential accesses.
         A walk-cache hit on a non-leaf PTE (tagged on ``vpn``, the virtual
         page being resolved) skips every level above it. Upper levels are
         few enough to stay LLC-cached; the leaf PTE line is LLC-cached iff
         the map pass (or a previous walk's refill) warmed it and no
         eviction hit it since — a rolled eviction drops the line, and the
-        walk's DRAM refill re-installs it."""
+        walk's DRAM refill re-installs it.
+
+        ``wc_sink`` (prefetch walks) defers walk-cache installs: the
+        non-leaf keys this walk read are appended to the sink instead of
+        filled, so the caller can install them when the in-flight walk
+        actually completes (``IOMMU._install_pending``). The cache is still
+        PROBED — an in-flight prefetch rides the same hardware walker."""
         vpn = page if vpn is None else vpn
         total_host = 0.0
         evict_p = self.pte_evict_prob + self.host_interference
@@ -355,8 +362,11 @@ class Sv39Walk:
             if not leaf and self.walk_cache is not None:
                 # the walker read this non-leaf PTE: install it (not a
                 # device walk of its own — never counts in wc walk stats)
-                self.walk_cache.fill(self._wc_key(asid, vpn, level), 1,
-                                     walked=False)
+                key = self._wc_key(asid, vpn, level)
+                if wc_sink is None:
+                    self.walk_cache.fill(key, 1, walked=False)
+                else:
+                    wc_sink.append(key)
         if self.llc:
             # The walk's leaf access leaves the PTE line LLC-resident: a
             # hit keeps it, a miss's DRAM refill installs it.
@@ -365,6 +375,18 @@ class Sv39Walk:
         self.stats.walks += 1
         self.stats.cycles += cost
         return cost
+
+    def prefetch_walk(self, asid: int, page: int,
+                      vpn: Optional[int] = None) -> Tuple[float, tuple]:
+        """Walk on behalf of a PREFETCH: identical probing and cost to a
+        demand walk, but the non-leaf PTE lines it read are RETURNED
+        instead of installed — the walk is in flight until the prefetch
+        completes, so the IOMMU installs the lines (and counts them as
+        ``walk_cache_prefills``) at completion time. Returns
+        ``(cost, non_leaf_keys)``."""
+        lines: list = []
+        cost = self.walk(asid, page, vpn=vpn, wc_sink=lines)
+        return cost, tuple(lines)
 
 
 class IOAddressSpace:
@@ -473,6 +495,10 @@ class IOMMU:
         self._pending: "OrderedDict" = OrderedDict()
         self._prefetched: set = set()
         self._streams: Dict[int, List[int]] = {}
+        # Non-leaf PTE lines installed into the walk model's walk cache by
+        # COMPLETING prefetches (a useful prefetch warms the walk cache for
+        # the neighbourhood, not just its own leaf translation).
+        self.walk_cache_prefills = 0
         self.epoch = 0
         self._spaces: Dict[int, IOAddressSpace] = {}
         # svasan shadow-state hook (core/sva/sanitizer.py); None keeps
@@ -594,13 +620,20 @@ class IOMMU:
         demanded key itself was still in flight (a LATE prefetch — the
         demand exposes that walk's latency), else 0."""
         late = 0.0
-        for key, (pp, cost) in self._pending.items():
+        wc = getattr(self.walk_model, "walk_cache", None)
+        for key, (pp, cost, lines) in self._pending.items():
             if key == demand_key:
                 late = cost
             if self.sanitizer is not None:
                 self.sanitizer.check_fill(self, key, pp)
             self.tlb.fill(key, pp, walked=False, cost=cost)
             self._prefetched.add(key)
+            if lines and wc is not None:
+                # the prefetch walk's non-leaf reads land now that the walk
+                # has completed (deferred from Sv39Walk.prefetch_walk)
+                for line in lines:
+                    wc.fill(line, 1, walked=False)
+                    self.walk_cache_prefills += 1
         self._pending.clear()
         if len(self._prefetched) > 4 * self.tlb.n_entries:
             # evicted-before-use keys accumulate; prune lazily
@@ -646,8 +679,16 @@ class IOMMU:
                     continue                     # unmapped: skip, don't walk
             else:
                 pp = lp
-            cost = self.walk_model.walk(asid, pp, vpn=lp)
-            self._pending[key] = (pp, cost)
+            # Walk models that distinguish in-flight prefetch walks (the
+            # Sv39 walker defers its walk-cache installs) expose
+            # prefetch_walk; others price it like any demand walk.
+            pw = getattr(self.walk_model, "prefetch_walk", None)
+            if pw is not None:
+                cost, lines = pw(asid, pp, vpn=lp)
+            else:
+                cost = self.walk_model.walk(asid, pp, vpn=lp)
+                lines = ()
+            self._pending[key] = (pp, cost, lines)
             self.tlb.stats.prefetch_issued += 1
 
     def host_map_pass(self, pages: Iterable[int]) -> None:
@@ -736,7 +777,8 @@ class IOMMU:
                 degree=self.prefetch_config.degree,
                 distance=self.prefetch_config.distance,
                 issued=ts.prefetch_issued, useful=ts.prefetch_useful,
-                late=ts.prefetch_late)
+                late=ts.prefetch_late,
+                walk_cache_prefills=self.walk_cache_prefills)
         return {"tlb": self.tlb.stats.as_dict(),
                 "walk": walk,
                 "epoch": self.epoch,

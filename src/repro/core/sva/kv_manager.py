@@ -298,6 +298,18 @@ class PrefixIndex:
             if not self.evict_one(pool):
                 break
 
+    def evictable_pages(self, pool: PagePool) -> int:
+        """Pages the index could EVENTUALLY return to the pool: cached pages
+        whose only reference is the index's own (refcount 1). A live
+        sequence pinning a chain page pins every ancestor too (it maps the
+        whole chain), so a refcount-1 page's entire subtree is refcount-1
+        and bottom-up ``evict_one`` calls can free all of them — this is
+        the prefix cache's contribution to the scheduler's page headroom."""
+        return (sum(1 for pg in self._node_by_page
+                    if pool.refcount(pg) == 1)
+                + sum(1 for pg in self._partial_by_page
+                      if pool.refcount(pg) == 1))
+
     def try_release_for_write(self, page: int, pool: PagePool) -> bool:
         """A sequence is about to write into ``page`` and found refcount > 1.
         If the ONLY other owner is this index (refcount == 2) and the entry
@@ -321,6 +333,71 @@ class PrefixIndex:
         return True
 
 
+class PrefixCapTuner:
+    """Online controller for the prefix-cache page cap (``PrefixIndex
+    .max_pages``), replacing a static ``prefix_cache_pages`` pick with a
+    live-pressure policy. Every ``interval`` observed steps it closes a
+    window and compares the window's eviction count (cache churn under
+    pool pressure) against its hit count (sharing value):
+
+      shrink  free pages < 25% of the pool AND evictions outpaced hits —
+              the warm cache is squatting on pages the allocator keeps
+              clawing back one eviction at a time; halve the cap (floor
+              ``min_pages``) and enforce it immediately, so admission and
+              decode growth see the headroom as ordinary free pages.
+      grow    free pages > 50% AND hits kept up with evictions — sharing
+              is earning its footprint and the pool has slack; double the
+              cap (ceiling: the pool size).
+
+    Between those bands the cap holds (hysteresis — the two thresholds
+    keep a borderline pool from oscillating every window)."""
+
+    def __init__(self, index: PrefixIndex, pool: PagePool,
+                 interval: int, min_pages: int = 4):
+        if interval < 1:
+            raise ValueError(f"interval={interval} (need >= 1)")
+        self.index = index
+        self.pool = pool
+        self.interval = interval
+        self.min_pages = min_pages
+        self._steps = 0
+        self._last_ev = index.stats.evictions
+        self._last_hits = index.stats.hits
+        self.windows = 0
+        self.shrinks = 0
+        self.grows = 0
+
+    def observe_step(self) -> None:
+        self._steps += 1
+        if self._steps < self.interval:
+            return
+        self._steps = 0
+        self.windows += 1
+        d_ev = self.index.stats.evictions - self._last_ev
+        d_hit = self.index.stats.hits - self._last_hits
+        self._last_ev = self.index.stats.evictions
+        self._last_hits = self.index.stats.hits
+        free_frac = self.pool.n_free / max(self.pool.n_pages, 1)
+        cached = self.index.n_cached_pages
+        # 0 == uncapped: the effective cap is whatever is cached right now.
+        cap = self.index.max_pages or max(cached, self.min_pages)
+        if free_frac < 0.25 and d_ev > d_hit:
+            new = max(self.min_pages, min(cap, max(cached, 1)) // 2)
+            if not self.index.max_pages or new < self.index.max_pages:
+                self.index.max_pages = new
+                self.index.enforce_cap(self.pool)
+                self.shrinks += 1
+        elif free_frac > 0.5 and d_hit >= d_ev:
+            new = min(self.pool.n_pages, cap * 2)
+            if self.index.max_pages and new > self.index.max_pages:
+                self.index.max_pages = new
+                self.grows += 1
+
+    def stats(self) -> dict:
+        return {"windows": self.windows, "shrinks": self.shrinks,
+                "grows": self.grows}
+
+
 class PagedKVManager:
     """Page allocation + block tables for a fixed-B decode step."""
 
@@ -332,6 +409,8 @@ class PagedKVManager:
                  tlb_ways: int = 0,
                  tlb_prefetch: Optional[PrefetchConfig] = None,
                  autotune: Optional[AutoTuneConfig] = None,
+                 prefix_autotune: int = 0,
+                 pool_pages: Optional[int] = None,
                  sanitize: Optional[bool] = None):
         assert offload_mode in ("zero_copy", "copy")
         if layout is None:
@@ -345,8 +424,26 @@ class PagedKVManager:
         self.layout = layout
         self.total_pages = n_slots * max_pages_per_slot
         self.null_page = self.total_pages            # device drop/zero sentinel
+        # ``pool_pages`` constrains the PHYSICAL pool below the worst case
+        # (n_slots full slots) — the oversubscription regime continuous
+        # batching is built for: lazy admissions pack more live sequences
+        # than full reservations would, and the scheduler preempts when
+        # growth outruns the pool. Device arrays keep worst-case sizing
+        # (the null page id is unchanged); the allocator just never hands
+        # out pages >= pool_pages.
+        if pool_pages is None:
+            pool_pages = self.total_pages
         if layout == "global":
-            self.pool = PagePool(self.total_pages, page_size)
+            if not max_pages_per_slot <= pool_pages <= self.total_pages:
+                raise ValueError(
+                    f"pool_pages={pool_pages} (need max_pages_per_slot="
+                    f"{max_pages_per_slot} <= pool_pages <= "
+                    f"{self.total_pages})")
+        elif pool_pages != self.total_pages:
+            raise ValueError("pool_pages requires the global layout")
+        self.pool_pages = pool_pages
+        if layout == "global":
+            self.pool = PagePool(pool_pages, page_size)
             self.pools = None
             self.tables = np.full((n_slots, max_pages_per_slot),
                                   self.null_page, np.int32)
@@ -375,6 +472,16 @@ class PagedKVManager:
         # epoch bump, which the engine observes as a full table upload.
         self.autotuner = (TLBAutoTuner(self.iommu, autotune)
                           if autotune is not None else None)
+        # Prefix-cache cap autotuner (default off): the engine advances it
+        # once per decode step via ``observe_step``; it shrinks/grows
+        # ``PrefixIndex.max_pages`` from live pool pressure.
+        if prefix_autotune < 0:
+            raise ValueError(
+                f"prefix_autotune={prefix_autotune} (need >= 0; 0 = off)")
+        self.prefix_tuner = (PrefixCapTuner(self.prefix, self.pool,
+                                            prefix_autotune)
+                             if prefix_autotune and self.prefix is not None
+                             else None)
         # svasan (core/sva/sanitizer.py): opt-in shadow-state checking over
         # the pool(s) + the IOMMU. ``sanitize=None`` defers to REPRO_SVASAN.
         self.sanitizer = (SVASanitizer() if _resolve_sanitize(sanitize)
@@ -387,6 +494,8 @@ class PagedKVManager:
         self.seqs: Dict[int, SeqState] = {}
         self.lengths = np.zeros((n_slots,), np.int32)
         self.dirty_rows = set(range(n_slots))
+        self.preemptions = 0
+        self.resumes = 0
 
     @property
     def tlb(self):
@@ -411,6 +520,11 @@ class PagedKVManager:
                 f"prompt_len={prompt_len} + max_tokens={max_tokens} needs "
                 f"{need} pages but a slot holds {self.max_pages} "
                 f"({self.max_pages * self.page_size} tokens)")
+        if self.layout == "global" and need > self.pool_pages:
+            raise CapacityError(
+                f"prompt_len={prompt_len} + max_tokens={max_tokens} needs "
+                f"{need} pages but the physical pool holds "
+                f"{self.pool_pages}")
         return need
 
     def _alloc_evicting(self, n: int) -> List[int]:
@@ -425,7 +539,8 @@ class PagedKVManager:
                     raise
 
     def admit(self, seq_id: int, prompt_len: int, max_tokens: int,
-              tokens: Optional[Sequence[int]] = None) -> Optional[SeqState]:
+              tokens: Optional[Sequence[int]] = None,
+              lazy: bool = False) -> Optional[SeqState]:
         """Allocate a slot + pages for a prompt.
 
         ``tokens`` (the actual prompt ids) enables prefix sharing: full
@@ -437,11 +552,24 @@ class PagedKVManager:
         its KV write is dropped by the engine when it lands in a shared page
         (the page already holds exactly that KV).
 
+        ``lazy`` (continuous batching) reserves only the PROMPT's pages —
+        decode growth allocates page-by-page in ``append_token``, and the
+        scheduler preempts under pool pressure instead of admission
+        pre-paying ``max_tokens`` worth of pages. Lazy admission also skips
+        ``PrefixIndex.register``: under chunked prefill the prompt's KV
+        materializes over several steps, and registering uncomputed pages
+        would let another admission share garbage. The engine registers
+        progressively via :meth:`register_progress` as chunks complete.
+
         Returns None when no slot/pages are free right now (continuous
         batching waits); raises :class:`CapacityError` for requests that can
         never fit (see ``ensure_fits``).
         """
         need = self.ensure_fits(prompt_len, max_tokens)
+        if lazy:
+            if self.layout != "global":
+                raise ValueError("lazy admission requires the global layout")
+            need = max(-(-prompt_len // self.page_size), 1)
         if not self.free_slots:
             return None
         slot = self.free_slots[-1]
@@ -476,7 +604,8 @@ class PagedKVManager:
                       shared_pages=len(shared), prefill_start=prefill_start)
         self.seqs[seq_id] = st
         if sharing:
-            self.prefix.register(tokens, pages, self.pool)
+            if not lazy:
+                self.prefix.register(tokens, pages, self.pool)
             if shared:
                 self.prefix.stats.hits += 1
                 self.prefix.stats.pages_shared += len(shared)
@@ -609,6 +738,105 @@ class PagedKVManager:
             # every reference the sequence held must actually be gone
             self.sanitizer.check_release(free_pool, seq_id, st.pages, snap)
 
+    # ------------------------------------------------- preemption (continuous)
+    def register_progress(self, seq_id: int, tokens: Sequence[int],
+                          computed: int) -> None:
+        """Register a lazily-admitted prompt's COMPUTED pages in the prefix
+        index (the chunked-prefill counterpart of the registration eager
+        ``admit`` does up front). Called by the engine after each chunk's
+        KV lands, so the index only ever references resident KV. Idempotent
+        per page — each chunk re-walks the already-registered prefix and
+        adds only its own new pages (plus the partial tail on the final
+        chunk, exactly like eager registration)."""
+        if self.prefix is None:
+            return
+        st = self.seqs[seq_id]
+        toks = [int(t) for t in tokens[:computed]]
+        n = -(-computed // self.page_size)
+        self.prefix.register(toks, st.pages[:n], self.pool)
+        self.prefix.enforce_cap(self.pool)
+
+    def preempt(self, seq_id: int, resident_tokens:
+                Optional[Sequence[int]] = None) -> None:
+        """Evict a live sequence under pool pressure: release its slot,
+        pages, and ASID exactly like :meth:`release` — but FIRST register
+        its computed KV (``resident_tokens``: every token whose KV is
+        actually written — the scheduler passes prompt+generated minus the
+        one pending token, or the computed chunk prefix mid-prefill) in the
+        prefix index. A prompt-sharing resume then re-matches those warm
+        pages and skips their recompute entirely; under continued pressure
+        they are ordinary evictable cache entries. The sanitizer sees the
+        same snapshot/release discipline as a completion."""
+        if self.layout != "global":
+            raise ValueError("preemption requires the global layout")
+        st = self.seqs.pop(seq_id)
+        if self.prefix is not None and resident_tokens:
+            toks = [int(t) for t in resident_tokens]
+            n = -(-len(toks) // self.page_size)
+            self.prefix.register(toks, st.pages[:n], self.pool)
+        snap = (self.sanitizer.snapshot_rc(self.pool, st.pages)
+                if self.sanitizer is not None else None)
+        self.pool.free(st.pages)
+        self.free_slots.append(st.slot)
+        self.lengths[st.slot] = 0
+        self.tables[st.slot] = self.null_page
+        self.sva_stats.unmap_calls += 1
+        self.preemptions += 1
+        self.iommu.detach(st.slot)
+        self.dirty_rows.add(st.slot)
+        if self.sanitizer is not None:
+            self.sanitizer.check_release(self.pool, seq_id, st.pages, snap)
+
+    def resume(self, seq_id: int, prompt_len: int, max_tokens: int,
+               tokens: Optional[Sequence[int]] = None) -> Optional[SeqState]:
+        """Re-admit a preempted sequence. The caller passes every
+        KV-resident token it had as the new prompt (with ``max_tokens``
+        rebased to the remaining budget); with ``tokens`` the prefix index
+        re-matches the pages :meth:`preempt` registered — a warm resume
+        costs one recomputed token — and without a match the KV is
+        recomputed from tokens. Either way this is a fresh lazy admission:
+        new slot, new ASID, new pages."""
+        st = self.admit(seq_id, prompt_len, max_tokens, tokens=tokens,
+                        lazy=True)
+        if st is not None:
+            self.resumes += 1
+        return st
+
+    def free_page_headroom(self) -> int:
+        """Pages an allocation could obtain RIGHT NOW: free pages plus warm
+        prefix-cache pages the index solely owns (``_alloc_evicting``
+        reclaims those one eviction at a time). The scheduler compares this
+        against :meth:`next_step_page_demand` to decide preemption and
+        admission."""
+        free = self.pool.n_free
+        if self.prefix is not None:
+            free += self.prefix.evictable_pages(self.pool)
+        return free
+
+    def next_step_page_demand(self) -> int:
+        """Upper bound on pages the NEXT step's appends can allocate: one
+        per live sequence whose next token write either crosses into an
+        unallocated page (lazy-admission growth) or lands in a shared page
+        (CoW duplication — counted even when a steal would avoid the
+        allocation, so the bound stays conservative)."""
+        demand = 0
+        for st in self.seqs.values():
+            if st.done:
+                continue
+            li = st.length // self.page_size
+            if li >= len(st.pages):
+                if len(st.pages) < self.max_pages:
+                    demand += 1
+            elif self.pool.is_shared(st.pages[li]):
+                demand += 1
+        return demand
+
+    def observe_step(self) -> None:
+        """Advance per-step online controllers (currently the prefix-cache
+        cap tuner). The engine calls this once per decode step."""
+        if self.prefix_tuner is not None:
+            self.prefix_tuner.observe_step()
+
     # ------------------------------------------------------------ device view
     def delta_rows(self) -> List[int]:
         """Slot rows whose tables changed since last upload (delta upload —
@@ -623,17 +851,26 @@ class PagedKVManager:
         self.iommu.invalidate()              # bumps the epoch exactly once
         self.dirty_rows.update(range(self.n_slots))
 
-    def translate_step(self) -> List[Tuple[int, int, int]]:
+    def translate_step(self, resident: Optional[Dict[int, int]] = None
+                       ) -> List[Tuple[int, int, int]]:
         """Run one decode step's page accesses through the IOMMU (ASID ==
         slot): every live sequence gathers its resident KV pages. Returns
         the (slot, logical_page, physical_page) access list — the serving
         hot path's translation trace, countable live (``CountingWalk``) or
-        replayable through ``Sv39Walk`` for modeled PTW cost."""
+        replayable through ``Sv39Walk`` for modeled PTW cost.
+
+        ``resident`` (continuous batching) overrides the per-sequence
+        resident-token count by seq_id: a mid-prefill sequence has KV for
+        its computed chunks only, not ``SeqState.length`` (= the full
+        prompt), so the step must not translate — or charge PTW cost for —
+        pages no access touches yet."""
         out: List[Tuple[int, int, int]] = []
         for st in self.seqs.values():
             if st.done:
                 continue
-            n = min(-(-st.length // self.page_size), len(st.pages))
+            toks = (st.length if resident is None
+                    else resident.get(st.seq_id, st.length))
+            n = min(-(-toks // self.page_size), len(st.pages))
             for lp in range(n):
                 phys, _, _ = self.iommu.translate(st.slot, lp)
                 out.append((st.slot, lp, phys))
@@ -673,12 +910,16 @@ class PagedKVManager:
                "pool_high_water": high,
                "pool_utilization": round(util, 4),
                "pool_shares": sum(p.stats.shares for p in pools),
-               "cow_copies": sum(p.stats.cow_copies for p in pools)}
+               "cow_copies": sum(p.stats.cow_copies for p in pools),
+               "preemptions": self.preemptions,
+               "resumes": self.resumes}
         if self.prefix is not None:
             out["prefix"] = {**self.prefix.stats.as_dict(),
                              "cached_pages": self.prefix.n_cached_pages,
                              "policy": self.prefix.policy,
                              "max_pages": self.prefix.max_pages}
+            if self.prefix_tuner is not None:
+                out["prefix"]["tuner"] = self.prefix_tuner.stats()
         if self.sanitizer is not None:
             out["svasan"] = self.sanitizer.stats()
         return out

@@ -416,6 +416,13 @@ def paged_decode_attention(q: jax.Array, kv: PagedKV, *,
     s = _softcap(s, softcap)
     valid = pos < jnp.minimum(
         jnp.broadcast_to(kv.length, (B,))[:, None, None], kv.capacity)
+    # Mask BEFORE the softmax max (like the Pallas kernel and
+    # prefix_context_attention): an invalid slot must not contribute to
+    # ``m``, or stale KV in a recycled page perturbs every valid
+    # probability at the ULP level — outputs would depend on what a
+    # page's PREVIOUS owner wrote (preempt/release recycling breaks
+    # bit-identity even though the masked sum is mathematically the same).
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
     m = jnp.max(s, axis=(-2, -1), keepdims=True)
     m = jnp.where(jnp.isfinite(m), m, 0.0)
     p_ = jnp.exp(s - m)

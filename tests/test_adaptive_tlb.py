@@ -13,7 +13,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from benchmarks.tlb_sweep import Geometry, replay_geometry
 from repro.core.sva.iommu import (IOMMU, AutoTuneConfig, CountingWalk,
                                   PrefetchConfig, Sv39Walk, TLBAutoTuner,
-                                  TLBConfig, default_autotune_candidates)
+                                  TLBConfig, WalkCacheConfig,
+                                  default_autotune_candidates)
 from repro.core.sva.kv_manager import PagedKVManager, PrefixIndex
 from repro.core.sva.page_pool import PagePool
 from repro.core.sva.tlb import POLICIES
@@ -106,6 +107,30 @@ def test_stream_prefetch_runs_ahead_of_demand():
     base = IOMMU(walk_model=_sv39(), tlb=TLBConfig(16))
     base_cost = sum(base.translate(7, p)[1] for p in range(12))
     assert sum(costs) < base_cost
+
+
+def test_prefetch_fills_walk_cache():
+    """A completed IOTLB prefetch installs its walk's non-leaf PTE lines
+    into the Sv39 walk cache too (deferred to COMPLETION time — an
+    in-flight prefetch must not warm the walk cache early), counted by the
+    IOMMU-owned ``walk_cache_prefills`` stat. CountingWalk (no walk-cache
+    attribute) keeps the counter at zero."""
+    # The stream crosses a 2 MiB (512-page) region boundary, so the
+    # run-ahead prefetch walks are the FIRST to touch the next region's
+    # non-leaf lines (within one region they'd just hit the lines the
+    # initial demand walk installed).
+    iommu = _mk(entries=16,
+                walk=_sv39(walk_cache=WalkCacheConfig(16)),
+                prefetch=PrefetchConfig("stream", degree=2, distance=4))
+    for p in range(504, 520):
+        iommu.translate(3, p)
+    s = iommu.stats()
+    assert s["walk"]["prefetch"]["walk_cache_prefills"] > 0
+    counting = _mk(entries=16,
+                   prefetch=PrefetchConfig("stream", degree=2, distance=4))
+    for p in range(504, 520):
+        counting.translate(3, p)
+    assert counting.stats()["walk"]["prefetch"]["walk_cache_prefills"] == 0
 
 
 def test_prefetch_never_fabricates_unmapped_translation():

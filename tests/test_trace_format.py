@@ -33,6 +33,28 @@ def test_well_formed_trace_replays():
     assert all(cycles > 0 for _, cycles in per_step)
 
 
+def test_preemption_bearing_trace_replays():
+    # The continuous scheduler annotates pool-pressure preemption with
+    # ("preempt", sid) before the victim's "unmap" and ("resume", sid,
+    # pages) before the re-admission "map". Annotations must not change
+    # replay numbers: same step stream -> same per-step costs.
+    base = [
+        ("map", [0, 1], 0, [0, 1]),
+        ("step", [(0, 0, 0), (0, 1, 1)], 2),
+        ("unmap", 0, 2),
+        ("map", [2, 3], 0, [2, 3]),
+        ("step", [(0, 0, 2)], 1),
+    ]
+    annotated = [
+        base[0], base[1],
+        ("preempt", 7),
+        base[2],
+        ("resume", 7, [2, 3]),
+        base[3], base[4],
+    ]
+    assert replay(annotated) == replay(base)
+
+
 @pytest.mark.parametrize("bad", [
     ("map",),                     # missing pages
     ("map", [0], 1),              # extended form missing the table row
@@ -42,6 +64,10 @@ def test_well_formed_trace_replays():
     ("unmap", 0),                 # missing n_pages
     ("unmap", "slot0", 3),        # slot not an int
     ("teardown", 0, 3),           # unknown event kind
+    ("preempt",),                 # missing seq_id
+    ("preempt", "seq7"),          # seq_id not an int
+    ("resume", 7),                # missing pages
+    ("resume", 7, 3),             # pages not a sequence
     "unmap",                      # event not a tuple
     (),                           # empty event
 ])
@@ -59,6 +85,14 @@ def test_error_carries_expected_shape():
     with pytest.raises(TraceFormatError) as ei:
         replay([("unmap", 0)])
     assert '("unmap", slot, n_pages)' in ei.value.expected
+
+
+def test_unknown_tag_error_names_the_tag():
+    # "teardown" vs "unmap" should read as a TAG problem at a glance —
+    # the error must quote the offending tag, not just list valid shapes.
+    with pytest.raises(TraceFormatError) as ei:
+        replay([("teardown", 0, 3)])
+    assert "'teardown'" in str(ei.value)
 
 
 def test_malformed_access_deep_in_step_names_event_index():
