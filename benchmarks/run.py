@@ -14,8 +14,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: table2,fig2,fig3,fig5,serving,sweep,"
-                         "roofline")
+                    help="comma list: table2,fig2,fig3,fig5,serving,disagg,"
+                         "sweep,roofline")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -36,6 +36,11 @@ def main() -> None:
         from benchmarks import paged_serving
         sections.append(("Paged serving (TPU Fig.2 analogue)",
                          paged_serving.run))
+    if want is None or "disagg" in want:
+        from benchmarks import disagg_serving
+        # smoke sizes inside the driver; full sizes via the standalone CLI
+        sections.append(("Disaggregated serving A/B (smoke)",
+                         lambda: disagg_serving.run(dry_run=True)))
     if want is None or "sweep" in want:
         from benchmarks import tlb_sweep
         # smoke grid inside the driver; the full grid is the standalone CLI

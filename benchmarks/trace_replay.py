@@ -29,6 +29,15 @@ Trace events (recorded by ``ServingEngine(record_translation_trace=True)``):
                                 Annotation only: the paired "map" carries
                                 the new mapping. Both keep preemption-
                                 bearing traces replayable and countable.
+  ("xfer", seq_id, n_pages, mode)
+                                disaggregated prefill->decode KV migration
+                                of ``n_pages`` pages, ``mode`` "copy" or
+                                "share". Annotation only: the translation
+                                consequences ride the paired "unmap"
+                                (source ASID teardown) and "map"
+                                (destination attach) the engine emits
+                                right after — so disagg traces replay
+                                through every IOMMU design point unchanged.
 
 Events are shape-checked on replay: a malformed event raises
 :class:`TraceFormatError` naming the event index and the expected shape
@@ -74,6 +83,7 @@ _EVENT_SHAPES = {
     "unmap": '("unmap", slot, n_pages)',
     "preempt": '("preempt", seq_id)',
     "resume": '("resume", seq_id, pages)',
+    "xfer": '("xfer", seq_id, n_pages, mode) with mode "copy" or "share"',
 }
 
 
@@ -104,6 +114,11 @@ def _validate_event(i: int, ev) -> str:
         if (len(ev) != 3 or not isinstance(ev[1], int)
                 or isinstance(ev[2], (str, int, float))):
             raise TraceFormatError(i, ev, _EVENT_SHAPES["resume"])
+    elif kind == "xfer":
+        if (len(ev) != 4 or not isinstance(ev[1], int)
+                or not isinstance(ev[2], int)
+                or ev[3] not in ("copy", "share")):
+            raise TraceFormatError(i, ev, _EVENT_SHAPES["xfer"])
     else:  # step
         if (len(ev) != 3 or isinstance(ev[1], (str, int, float))
                 or not isinstance(ev[2], (int, float))):
@@ -156,11 +171,12 @@ def replay_trace(trace, iommu: IOMMU, kv_bytes_per_token: int,
             if sp is not None:
                 sp.table.clear()        # released: the prefetcher must not
                                         # resolve through a dead mapping
-        elif kind in ("preempt", "resume"):
-            # Annotations: the scheduler emits the translation-visible
+        elif kind in ("preempt", "resume", "xfer"):
+            # Annotations: the engine emits the translation-visible
             # consequences as the paired "unmap" (ASID teardown on
-            # preempt) and "map" (fresh mapping on resume) events, so
-            # replay only needs to validate and count them.
+            # preempt / migration source) and "map" (fresh mapping on
+            # resume / migration destination) events, so replay only
+            # needs to validate and count them.
             continue
         else:
             _, accesses, tokens = ev

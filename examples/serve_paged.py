@@ -20,6 +20,13 @@ pages only), prompts prefill in chunks inside mixed decode steps, and pool
 pressure is resolved by preempting the newest sequence (its KV goes warm
 into the prefix cache; resume re-matches it) — watch the preemptions /
 resumes / steps-to-first-token lines.
+
+``--disagg share`` (or ``copy``) splits the same demo across a prefill
+worker and a decode worker connected by IOMMU-priced KV transfers:
+finished prefills migrate to the decode worker's slots, zero-copy (page
+re-attachment under the decode ASID) or staged (device-side batched page
+copy) — watch the transfer line for bytes moved and remote-DMA PTW
+cycles. Outputs are bit-identical to the colocated engines either way.
 """
 import argparse
 import dataclasses
@@ -28,7 +35,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
+from repro.core.serving.disagg import DisaggEngine
 from repro.core.serving.engine import ServingEngine
+from repro.core.sva.iommu import IOMMU, Sv39Walk, TLBConfig
 from repro.models import init_params
 
 ap = argparse.ArgumentParser(
@@ -58,6 +67,13 @@ ap.add_argument("--scheduler", default="fixed",
                 help="continuous = token-budget scheduling with chunked "
                      "prefill and preempt/resume, demoed as two bursty "
                      "arrival waves over an oversubscribed pool")
+ap.add_argument("--disagg", default="off",
+                choices=("off", "copy", "share"),
+                help="disaggregate into a 2-slot prefill worker + 2-slot "
+                     "decode worker; finished prefills hand their KV off "
+                     "by IOMMU-priced migration (share = zero-copy page "
+                     "re-attachment, copy = staged payload). Implies the "
+                     "continuous two-wave demo")
 ap.add_argument("--pool-pages", type=int, default=0,
                 help="physical KV page pool size (0 = full n_slots*pages "
                      "reservation; --scheduler continuous defaults to an "
@@ -75,13 +91,25 @@ cfg = dataclasses.replace(
     # differentiate within a short example run.
     serve_tlb_entries=64 if args.tlb_autotune else cfg.serve_tlb_entries)
 params = init_params(cfg, jax.random.key(0))
-pool_pages = args.pool_pages \
-    or (16 if args.scheduler == "continuous" else 0)
-eng = ServingEngine(cfg, params, n_slots=4, max_len=128, page_size=8,
-                    offload_mode="zero_copy",
-                    scheduler=args.scheduler,
-                    pool_pages=pool_pages or None,
-                    translation_stats=True)   # live IOTLB hit/miss counting
+bursty = args.scheduler == "continuous" or args.disagg != "off"
+pool_pages = args.pool_pages or (16 if bursty else 0)
+if args.disagg != "off":
+    # Prefill/decode disaggregation at the same total width; the transfer
+    # fabric prices each hand-off as the paper's 4-entry IOTLB over a
+    # no-LLC Sv39 walk (remote DMA by virtual address).
+    eng = DisaggEngine(cfg, params, n_prefill_slots=2, n_decode_slots=2,
+                       max_len=128, page_size=8, offload_mode="zero_copy",
+                       disagg_mode=args.disagg,
+                       xfer_iommu=IOMMU(walk_model=Sv39Walk(llc=False),
+                                        tlb=TLBConfig(4, "lru")),
+                       pool_pages=pool_pages or None,
+                       translation_stats=True)
+else:
+    eng = ServingEngine(cfg, params, n_slots=4, max_len=128, page_size=8,
+                        offload_mode="zero_copy",
+                        scheduler=args.scheduler,
+                        pool_pages=pool_pages or None,
+                        translation_stats=True)  # live IOTLB hit/miss counts
 
 rng = np.random.default_rng(0)
 system = rng.integers(0, cfg.vocab_size, size=16).tolist()  # shared prefix
@@ -91,10 +119,13 @@ prompts = [system + rng.integers(0, cfg.vocab_size,
 prompts.append(list(prompts[1]))                 # exact duplicate
 prompts += [rng.integers(0, cfg.vocab_size, size=12).tolist()
             for _ in range(2)]                   # unrelated
-if args.scheduler == "continuous":
-    print(f"two bursty arrival waves of 10 requests over an oversubscribed "
-          f"{eng.mgr.pool.n_pages}-page pool (lazy admission, chunked "
-          "prefill, preempt/resume under pressure)...")
+if bursty:
+    workers = (f"a 2-slot prefill worker + 2-slot decode worker "
+               f"({args.disagg}-mode KV transfer) and " if args.disagg != "off"
+               else "")
+    print(f"two bursty arrival waves of 10 requests over {workers}an "
+          f"oversubscribed {eng.mgr.pool.n_pages}-page pool (lazy "
+          "admission, chunked prefill, preempt/resume under pressure)...")
     finished = {}
     # Longer generations than the fixed demo: decode growth (one page per
     # 8 tokens per sequence) is what oversubscribes the pool.
@@ -125,12 +156,20 @@ if "autotune" in s["iommu"]:
           f"windows={at['windows']} -> current geometry "
           f"e{s['iommu']['tlb_entries']}.w{s['iommu']['tlb_ways']}."
           f"{s['iommu']['tlb_policy']} (explored: {at['explored']})")
-if args.scheduler == "continuous":
+if bursty:
     sc = s["sched"]
     ttft = [done[r].first_token_step - done[r].submitted_step for r in rids]
     print(f"scheduler: preemptions={sc['preemptions']} "
           f"resumes={sc['resumes']}; steps-to-first-token "
           f"mean={np.mean(ttft):.1f} max={max(ttft)}")
+if args.disagg != "off":
+    t = s["transfer"]
+    print(f"transfers: {t['transfers']} ({args.disagg}): "
+          f"pages shared={t['pages_shared']} copied={t['pages_copied']}, "
+          f"payload {t['payload_bytes']}B + table {t['table_bytes']}B, "
+          f"remote-DMA PTW {t['ptw_cycles']:.0f} cycles "
+          f"(deferred={s['disagg']['deferred']} "
+          f"cancelled={s['disagg']['cancelled']})")
 print(f"prefix cache: {s['prefix']}")
 print(f"prefill tokens saved: {s['prefill_tokens_saved']} "
       f"(shared admissions: {s['shared_admissions']}); "

@@ -87,6 +87,10 @@ class Request:
     # latency proxy the benchmarks report)
     submitted_step: Optional[int] = None
     first_token_step: Optional[int] = None
+    # first token produced by a DECODE step (== first_token_step + queueing
+    # in a colocated engine; in a disaggregated engine the gap additionally
+    # covers the prefill->decode KV transfer — the TTFDT metric)
+    first_decode_step: Optional[int] = None
 
 
 # ------------------------------------------------------------ cache walks
@@ -866,24 +870,30 @@ class ServingEngine:
         return forward_decode(self.cfg, params, tokens, kv_len, cache,
                               self.mi)
 
+    def _resident_tokens(self) -> Dict[int, int]:
+        """Per-sequence resident-token counts for this step's translation
+        accounting: a decoding sequence gathers everything it has; a
+        mid-prefill sequence only its computed chunks. (A disaggregated
+        front-end extends this with its decode worker's sequences.)"""
+        resident = {}
+        for sid in self.sched.running:
+            slot = self.buffer.slot_of(sid)
+            resident[sid] = (self.mgr.seqs[sid].length
+                             if self.buffer.is_decoding(slot)
+                             else int(self.buffer.n_computed[slot]))
+        return resident
+
     def _decode_continuous(self, out: SchedulerOutput):
         t0 = time.perf_counter()
         self._apply_cow()       # final-chunk first tokens may queue CoW
         self._upload_tables()
-        if self._translation_stats and self.sched.running:
-            # Per-sequence resident-token counts: a decoding sequence
-            # gathers everything it has; a mid-prefill sequence only its
-            # computed chunks.
-            resident = {}
-            for sid in self.sched.running:
-                slot = self.buffer.slot_of(sid)
-                resident[sid] = (self.mgr.seqs[sid].length
-                                 if self.buffer.is_decoding(slot)
-                                 else int(self.buffer.n_computed[slot]))
-            accesses = self.mgr.translate_step(resident=resident)
-            if self.translation_trace is not None:
-                self.translation_trace.append(
-                    ("step", accesses, int(sum(resident.values()))))
+        if self._translation_stats:
+            resident = self._resident_tokens()
+            if resident:
+                accesses = self.mgr.translate_step(resident=resident)
+                if self.translation_trace is not None:
+                    self.translation_trace.append(
+                        ("step", accesses, int(sum(resident.values()))))
         if not out.decode_slots:
             return
         lengths = self.mgr.device_lengths()
@@ -903,6 +913,9 @@ class ServingEngine:
             self.mgr.append_token(sid, tok)
             self.buffer.append(slot, tok)
             self.metrics["tokens"] += 1
+            req = self.active.get(sid)
+            if req is not None and req.first_decode_step is None:
+                req.first_decode_step = self._step_count
             if self.eos is not None and tok == self.eos:
                 self.mgr.seqs[sid].done = True
         self.metrics["decode_steps"] += 1

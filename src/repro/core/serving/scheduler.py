@@ -123,6 +123,12 @@ class Scheduler:
         self.waiting: Deque[WaitingSeq] = deque()
         self.running: List[int] = []          # admission order = priority
         self._pending_tok: Dict[int, Optional[int]] = {}
+        # Preemption floor: the colocated scheduler never preempts its
+        # oldest running sequence (IT is the forward progress). A
+        # disaggregated prefill worker lowers this to 0 — there the decode
+        # worker carries forward progress, and under pool pressure every
+        # prefill must be able to yield its pages to decode growth.
+        self.min_running = 1
         self.preemptions = 0
         self.resumes = 0
 
@@ -140,6 +146,14 @@ class Scheduler:
         self._pending_tok.pop(seq_id, None)
         self.buffer.detach(self.buffer.slot_of(seq_id))
 
+    def handoff(self, seq_id: int) -> None:
+        """Forget a sequence WITHOUT touching manager or buffer state — the
+        disaggregated front-end migrates its KV to a decode worker and
+        re-attaches the buffer row itself. The sequence simply stops being
+        this scheduler's to run."""
+        self.running.remove(seq_id)
+        self._pending_tok.pop(seq_id, None)
+
     @property
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
@@ -152,7 +166,7 @@ class Scheduler:
         #    Preempt newest-first until the pool (after prefix-cache
         #    eviction) can satisfy it; the oldest running sequence is never
         #    preempted (guaranteed forward progress).
-        while (len(self.running) > 1
+        while (len(self.running) > self.min_running
                and self.mgr.next_step_page_demand()
                > self.mgr.free_page_headroom()):
             out.preempted.append(self._preempt_one())
@@ -201,7 +215,7 @@ class Scheduler:
         # 3. Compose the mixed step under the token budget.
         for sid in self.running:
             slot = self.buffer.slot_of(sid)
-            if self.buffer.is_decoding(slot):
+            if self._decodes_here(sid, slot):
                 out.decode_slots.append(slot)
         out.n_decode_tokens = len(out.decode_slots)
         budget = self.token_budget - out.n_decode_tokens
@@ -229,6 +243,14 @@ class Scheduler:
             budget -= e - s
             out.n_chunk_tokens += e - s
         return out
+
+    def _decodes_here(self, seq_id: int, slot: int) -> bool:
+        """Does this sequence decode on THIS scheduler's worker? The base
+        (colocated) scheduler decodes every sequence that finished prefill;
+        a disaggregated prefill worker overrides this to False — finished
+        prefills wait (still preemptible) for the transfer engine to
+        migrate them to the decode worker."""
+        return self.buffer.is_decoding(slot)
 
     # ------------------------------------------------------------ preempt
     def _preempt_one(self) -> Tuple[int, List[int]]:

@@ -54,12 +54,22 @@ Adaptive front-end hooks (both default-off):
     (a switch = flush + epoch bump, so the engine's next table upload is
     full).
 
+Disaggregated serving (``migrate``): a finished prefill's pages hand off
+between two ASIDs over the SAME pool — modeled remote DMA in which the
+source ASID translates every page through a transfer IOMMU (per-page
+PTW/IOTLB cost under the fabric's walk model) before the pages either
+re-attach zero-copy (``share``: refcount hand-off + table move, the SVA
+payoff) or are duplicated device-side (``copy``: the staged baseline).
+Accounting accumulates in :class:`TransferStats` (the ``transfer:`` stats
+block).
+
 Stats schema (``stats()``; see ARCHITECTURE.md): ``sva:`` host-side mode
 counters (disjoint zero-copy vs staging), ``tlb:`` the IOMMU's TLBStats
 dict, ``iommu:`` {walk, epoch, asids, tlb_entries, tlb_ways, tlb_policy,
 autotune: when tuning}, ``pool_*`` page-pool gauges, ``prefix:`` the
 PrefixIndex block (hits/misses/pages_shared/tokens_saved/evictions/
-steals/cached_pages/policy/max_pages) when sharing is on.
+steals/cached_pages/policy/max_pages) when sharing is on, ``transfer:``
+the TransferStats block once a migration has run.
 """
 from __future__ import annotations
 
@@ -398,6 +408,43 @@ class PrefixCapTuner:
                 "grows": self.grows}
 
 
+@dataclass
+class TransferStats:
+    """Accounting for prefill->decode KV migrations (modeled remote DMA).
+
+    ``payload_bytes`` is what actually moves over the fabric: copy-mode
+    duplicates every page's KV, share-mode moves only the translated table
+    entries (``table_bytes``) — the SVA payoff measured by
+    ``benchmarks/disagg_serving.py``. The tlb/prefetch counters are deltas
+    of the transfer IOMMU's TLBStats across each migration's translation
+    loop, so the ``transfer:`` block isolates hand-off translation cost
+    from the serving hot path's."""
+    transfers: int = 0            # completed migrations
+    pages_copied: int = 0         # copy-mode: fresh decode-side pages
+    pages_shared: int = 0         # share-mode: zero-copy re-attachments
+    payload_bytes: int = 0        # KV bytes moved (copy mode only)
+    table_bytes: int = 0          # translated table entries handed off
+    ptw_cycles: float = 0.0       # walk cost of the per-page translations
+    tlb_hits: int = 0
+    tlb_misses: int = 0
+    prefetch_issued: int = 0
+    prefetch_useful: int = 0
+    prefetch_late: int = 0
+
+    def as_dict(self):
+        return dict(transfers=self.transfers,
+                    pages_copied=self.pages_copied,
+                    pages_shared=self.pages_shared,
+                    payload_bytes=self.payload_bytes,
+                    table_bytes=self.table_bytes,
+                    ptw_cycles=round(self.ptw_cycles, 3),
+                    tlb_hits=self.tlb_hits,
+                    tlb_misses=self.tlb_misses,
+                    prefetch_issued=self.prefetch_issued,
+                    prefetch_useful=self.prefetch_useful,
+                    prefetch_late=self.prefetch_late)
+
+
 class PagedKVManager:
     """Page allocation + block tables for a fixed-B decode step."""
 
@@ -496,6 +543,7 @@ class PagedKVManager:
         self.dirty_rows = set(range(n_slots))
         self.preemptions = 0
         self.resumes = 0
+        self.transfer_stats = TransferStats()
 
     @property
     def tlb(self):
@@ -802,6 +850,125 @@ class PagedKVManager:
             self.resumes += 1
         return st
 
+    # -------------------------------------------- disaggregated migration
+    def reserve_slots(self, slots: Sequence[int]) -> None:
+        """Withhold slots from ``admit``/``resume`` so a disaggregated
+        front-end can dedicate them to a decode worker: migration targets
+        them explicitly via :meth:`migrate`, admission never sees them."""
+        for s in slots:
+            if any(st.slot == s for st in self.seqs.values()):
+                raise ValueError(f"slot {s} is occupied; cannot reserve")
+            if s in self.free_slots:
+                self.free_slots.remove(s)
+
+    def migrate(self, seq_id: int, dst_slot: int, mode: str = "share",
+                xfer_iommu: Optional[IOMMU] = None) -> SeqState:
+        """Move a sequence's KV pages from its current ASID to ``dst_slot``
+        over the shared pool — the single-process model of a prefill worker
+        handing a finished prompt's KV to a decode worker by remote DMA.
+
+        The hand-off is priced through the SVA layer: the SOURCE ASID
+        translates every resident page (through ``xfer_iommu`` — the
+        transfer fabric's IOMMU, e.g. a 4-entry IOTLB over ``Sv39Walk`` —
+        or the manager's own when none is given), accumulating PTW/IOTLB
+        cost in :class:`TransferStats`. Then either
+
+        * ``mode="share"``: zero-copy re-attachment — ``PagePool.share``
+          bumps every page's refcount before the source reference drops, so
+          the physical pages never transit free and the decode side maps
+          the SAME pages (only table entries move: ``table_bytes``); or
+        * ``mode="copy"``: fresh pages are allocated for the decode side
+          and queued on ``pending_cow`` for the engine's device-side
+          batched copy (``payload_bytes`` = full KV payload). The copy is
+          priced but the source pages are freed immediately — the engine
+          MUST drain ``pending_cow`` before anything reallocates them.
+
+        Source teardown and destination attach follow the exact
+        release/admit discipline (snapshot + ``check_release``, per-ASID
+        invalidation, delta-row dirtying), so migration is svasan-clean by
+        construction. Raises ``OutOfPages`` (copy mode, nothing mutated)
+        when the pool cannot back the duplicate — callers defer the
+        transfer and retry."""
+        if self.layout != "global":
+            raise ValueError("migration requires the global layout")
+        if mode not in ("share", "copy"):
+            raise ValueError(f"mode={mode!r} (expected 'share' or 'copy')")
+        st = self.seqs[seq_id]
+        src_slot = st.slot
+        if dst_slot == src_slot:
+            raise ValueError(f"seq {seq_id} already occupies slot {dst_slot}")
+        if any(s.slot == dst_slot for s in self.seqs.values()):
+            raise ValueError(f"destination slot {dst_slot} is occupied")
+        n = len(st.pages)
+        # Copy mode allocates FIRST so OutOfPages leaves nothing mutated.
+        if mode == "copy":
+            new_pages = self._alloc_evicting(n)
+        ts = self.transfer_stats
+        # --- price the hand-off: source ASID translates every page through
+        # the transfer fabric's IOMMU (remote DMA by virtual address).
+        iommu = xfer_iommu if xfer_iommu is not None else self.iommu
+        external = xfer_iommu is not None and xfer_iommu is not self.iommu
+        if external:
+            sp = iommu.space(src_slot)
+            if sp is None:
+                sp = iommu.attach(src_slot)
+            # cold install: the fabric walks page tables it has never seen
+            for lp, pp in enumerate(st.pages):
+                sp.table[lp] = pp
+        before = iommu.stats()["tlb"]
+        for lp in range(n):
+            _, cost, _ = iommu.translate(src_slot, lp)
+            ts.ptw_cycles += cost
+        after = iommu.stats()["tlb"]
+        for k, attr in (("hits", "tlb_hits"), ("misses", "tlb_misses"),
+                        ("prefetch_issued", "prefetch_issued"),
+                        ("prefetch_useful", "prefetch_useful"),
+                        ("prefetch_late", "prefetch_late")):
+            setattr(ts, attr, getattr(ts, attr) + after[k] - before[k])
+        if external:
+            iommu.detach(src_slot)           # the fabric window closes
+        ts.transfers += 1
+        ts.table_bytes += n * 4              # int32 table entries handed off
+        # --- hand off the physical pages.
+        if mode == "share":
+            # refcount++ BEFORE the source drop: pages never transit free
+            self.pool.share(st.pages)
+            new_pages = list(st.pages)
+            ts.pages_shared += n
+        else:
+            self.pending_cow.extend(zip(st.pages, new_pages))
+            ts.pages_copied += n
+            ts.payload_bytes += n * self.page_size * self.kv_bytes_per_token
+        # --- source teardown: exactly the release discipline.
+        snap = (self.sanitizer.snapshot_rc(self.pool, st.pages)
+                if self.sanitizer is not None else None)
+        src_pages = list(st.pages)
+        self.pool.free(src_pages)
+        self.free_slots.append(src_slot)
+        self.lengths[src_slot] = 0
+        self.tables[src_slot] = self.null_page
+        self.sva_stats.unmap_calls += 1
+        self.iommu.detach(src_slot)
+        self.dirty_rows.add(src_slot)
+        if self.sanitizer is not None:
+            self.sanitizer.check_release(self.pool, seq_id, src_pages, snap)
+        # --- destination attach: exactly the admit discipline, targeting
+        # the (possibly reserved) decode-side slot explicitly.
+        if dst_slot in self.free_slots:
+            self.free_slots.remove(dst_slot)
+        st.slot = dst_slot
+        st.pages = new_pages
+        row = np.full((self.max_pages,), self.null_page, np.int32)
+        row[:n] = new_pages
+        self.tables[dst_slot] = row
+        self.lengths[dst_slot] = st.length
+        self.dirty_rows.add(dst_slot)
+        self.sva_stats.map_calls += 1
+        self.sva_stats.table_entries_written += n
+        self.sva_stats.bytes_mapped += st.length * self.kv_bytes_per_token
+        self.iommu.attach(dst_slot).map(new_pages)
+        return st
+
     def free_page_headroom(self) -> int:
         """Pages an allocation could obtain RIGHT NOW: free pages plus warm
         prefix-cache pages the index solely owns (``_alloc_evicting``
@@ -920,6 +1087,8 @@ class PagedKVManager:
                              "max_pages": self.prefix.max_pages}
             if self.prefix_tuner is not None:
                 out["prefix"]["tuner"] = self.prefix_tuner.stats()
+        if self.transfer_stats.transfers:
+            out["transfer"] = self.transfer_stats.as_dict()
         if self.sanitizer is not None:
             out["svasan"] = self.sanitizer.stats()
         return out

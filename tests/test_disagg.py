@@ -1,0 +1,363 @@
+"""Disaggregated prefill/decode serving (core/serving/disagg/): KV
+migration between worker ASIDs over the shared pool, priced as remote DMA
+through the SVA layer — and the PR's core contract: the disaggregated
+engine's outputs are BIT-IDENTICAL to the colocated engines at equal
+total slot width, in BOTH transfer modes, under pool pressure, arrival
+interleavings, and preempt-during-pending-transfer races.
+
+Manager-level ``migrate`` unit tests are jax-free; engine tests mirror
+``tests/test_scheduler.py``'s workload and helpers. The interleaving
+property runs as fixed parameterized cases always, plus a
+hypothesis-randomized version when hypothesis is installed."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from benchmarks.trace_replay import replay_trace
+from repro.configs import get_config, reduce_for_smoke
+from repro.configs.paper_soc import PaperSoCConfig
+from repro.core.serving.disagg import DisaggEngine
+from repro.core.serving.engine import ServingEngine
+from repro.core.sva.iommu import (IOMMU, CountingWalk, Sv39Walk, TLBConfig)
+from repro.core.sva.kv_manager import PagedKVManager
+from repro.core.sva.page_pool import OutOfPages
+from repro.models import init_params
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    cfg = reduce_for_smoke(get_config("llama3.2-1b"))
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+# Same verified pressure workload as tests/test_scheduler.py: mixed
+# lengths, tight pool -> transfers defer, decode-side preemption fires.
+LENS = (11, 23, 5, 17, 9, 13)
+MAXTOKS = (10, 8, 12, 9, 11, 10)
+POOL = 8
+
+
+def _prompts(vocab, n=6, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=k).tolist() for k in LENS[:n]]
+
+
+def _drive(eng, prompts, maxtoks, arrivals=None):
+    finished = {}
+    if arrivals is None:
+        rids = [eng.submit(p, max_tokens=m)
+                for p, m in zip(prompts, maxtoks)]
+        done = eng.run()
+    else:
+        rids = [None] * len(prompts)
+        order = sorted(range(len(prompts)), key=lambda j: arrivals[j])
+        i, clock = 0, 0
+        while i < len(order) or eng.has_work:
+            while i < len(order) and arrivals[order[i]] <= clock:
+                j = order[i]
+                rids[j] = eng.submit(prompts[j], max_tokens=maxtoks[j])
+                i += 1
+            if eng.has_work:
+                eng.step(finished)
+            clock += 1
+        done = finished
+    return [done[r].out_tokens for r in rids], done
+
+
+def _serve_ref(cfg, params, prompts, maxtoks):
+    """The unconstrained fixed engine at the same total width: the ground
+    truth every scheduling/disaggregation policy must reproduce."""
+    eng = ServingEngine(cfg, params, n_slots=4, max_len=64, page_size=8,
+                        scheduler="fixed")
+    outs, _ = _drive(eng, prompts, maxtoks)
+    return outs
+
+
+def _serve_disagg(cfg, params, mode, prompts, maxtoks, pool_pages=None,
+                  arrivals=None, xfer_iommu=None, **engine_kw):
+    eng = DisaggEngine(cfg, params, n_prefill_slots=2, n_decode_slots=2,
+                       max_len=64, page_size=8, disagg_mode=mode,
+                       pool_pages=pool_pages, xfer_iommu=xfer_iommu,
+                       **engine_kw)
+    outs, done = _drive(eng, prompts, maxtoks, arrivals)
+    return outs, eng, done
+
+
+# ------------------------------------------------- manager-level migrate
+
+def _mgr(**kw):
+    return PagedKVManager(n_slots=4, max_pages_per_slot=4, page_size=8,
+                          kv_bytes_per_token=256, **kw)
+
+
+def _admit(mgr, seq_id, n_tokens):
+    st = mgr.admit(seq_id, prompt_len=n_tokens, max_tokens=2,
+                   tokens=list(range(n_tokens)), lazy=True)
+    assert st is not None
+    return st
+
+
+def test_migrate_share_is_zero_copy():
+    mgr = _mgr()
+    st = _admit(mgr, 1, 16)                      # 2 pages
+    src_slot, src_pages = st.slot, list(st.pages)
+    dst = next(s for s in range(4) if s != src_slot)
+    mgr.reserve_slots([dst])
+    out = mgr.migrate(1, dst, mode="share")
+    assert out.slot == dst
+    assert out.pages == src_pages                # SAME physical pages
+    t = mgr.transfer_stats
+    assert (t.transfers, t.pages_shared, t.pages_copied) == (1, 2, 0)
+    assert t.payload_bytes == 0                  # zero-copy: table only
+    assert t.table_bytes == 2 * 4
+    assert not mgr.pending_cow                   # nothing to stage
+    # source slot fully torn down, destination row installed
+    assert src_slot in mgr.free_slots
+    assert mgr.lengths[src_slot] == 0
+    assert mgr.lengths[dst] == st.length
+    assert list(mgr.tables[dst][:2]) == src_pages
+
+
+def test_migrate_copy_stages_full_payload():
+    mgr = _mgr()
+    st = _admit(mgr, 1, 16)
+    src_pages = list(st.pages)
+    dst = next(s for s in range(4) if s != st.slot)
+    mgr.reserve_slots([dst])
+    out = mgr.migrate(1, dst, mode="copy")
+    assert out.pages != src_pages                # fresh pages
+    t = mgr.transfer_stats
+    assert (t.transfers, t.pages_copied, t.pages_shared) == (1, 2, 0)
+    assert t.payload_bytes == 2 * 8 * 256        # pages * page_size * bytes
+    # device-side batched copy queued src->dst, drained by the engine
+    assert sorted(mgr.pending_cow) == sorted(zip(src_pages, out.pages))
+
+
+def test_migrate_prices_through_external_iommu():
+    """An external transfer IOMMU (the paper's 4-entry IOTLB over a
+    no-LLC Sv39 walk) sees every page COLD: full PTW cost lands in the
+    transfer stats, and the fabric's window closes after the hand-off."""
+    mgr = _mgr()
+    st = _admit(mgr, 1, 24)                      # 3 pages
+    dst = next(s for s in range(4) if s != st.slot)
+    mgr.reserve_slots([dst])
+    xfer = IOMMU(walk_model=Sv39Walk(llc=False), tlb=TLBConfig(4, "lru"))
+    mgr.migrate(1, dst, mode="share", xfer_iommu=xfer)
+    t = mgr.transfer_stats
+    assert t.ptw_cycles > 0
+    assert t.tlb_misses == 3 and t.tlb_hits == 0
+    assert xfer.space(st.slot) is None           # detached after transfer
+
+
+def test_migrate_validation_errors():
+    mgr = _mgr()
+    st1 = _admit(mgr, 1, 8)
+    st2 = _admit(mgr, 2, 8)
+    with pytest.raises(ValueError):              # same slot
+        mgr.migrate(1, st1.slot)
+    with pytest.raises(ValueError):              # destination occupied
+        mgr.migrate(1, st2.slot)
+    free = next(s for s in range(4) if s not in (st1.slot, st2.slot))
+    with pytest.raises(ValueError):              # unknown mode
+        mgr.migrate(1, free, mode="move")
+    with pytest.raises(ValueError):              # reserving an occupied slot
+        mgr.reserve_slots([st1.slot])
+
+
+def test_migrate_copy_out_of_pages_mutates_nothing():
+    mgr = _mgr(pool_pages=4)
+    st = _admit(mgr, 1, 24)                      # 3 of 4 pool pages
+    src_slot, src_pages = st.slot, list(st.pages)
+    dst = next(s for s in range(4) if s != src_slot)
+    mgr.reserve_slots([dst])
+    headroom = mgr.free_page_headroom()
+    with pytest.raises(OutOfPages):
+        mgr.migrate(1, dst, mode="copy")         # needs 3, only 1 free
+    # alloc-first ordering: the failed transfer left no trace
+    assert (st.slot, st.pages) == (src_slot, src_pages)
+    assert mgr.transfer_stats.transfers == 0
+    assert not mgr.pending_cow
+    assert mgr.free_page_headroom() == headroom
+    # ...and share mode still succeeds on the same sequence
+    mgr.migrate(1, dst, mode="share")
+
+
+# ----------------------------------------------------- engine validation
+
+def test_disagg_engine_validation(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError):
+        DisaggEngine(cfg, params, n_prefill_slots=2, n_decode_slots=2,
+                     max_len=64, disagg_mode="move")
+    with pytest.raises(ValueError):
+        DisaggEngine(cfg, params, n_prefill_slots=0, n_decode_slots=4,
+                     max_len=64)
+
+
+# ------------------------------------------------------------ bit-identity
+
+@pytest.mark.parametrize("mode", ["share", "copy"])
+def test_disagg_bit_identical_ample_pool(setup, mode):
+    """No pool pressure: prefill-worker chunking + migration + decode-
+    worker masking reproduces the fixed engine token-for-token."""
+    cfg, params = setup
+    prompts = _prompts(cfg.vocab_size)
+    ref = _serve_ref(cfg, params, prompts, MAXTOKS)
+    outs, eng, done = _serve_disagg(cfg, params, mode, prompts, MAXTOKS)
+    assert outs == ref
+    s = eng.stats()
+    assert s["disagg"]["transfers"] >= 1
+    # every decoded request carries the TTFDT stamp
+    assert all(r.first_decode_step is not None
+               and r.first_decode_step >= r.submitted_step
+               for r in done.values())
+
+
+@pytest.mark.parametrize("mode", ["share", "copy"])
+def test_disagg_bit_identical_under_pressure(setup, mode):
+    """Oversubscribed pool: transfers defer/cancel, prefills and decodes
+    preempt — and outputs STILL match the unconstrained fixed engine."""
+    cfg, params = setup
+    prompts = _prompts(cfg.vocab_size)
+    ref = _serve_ref(cfg, params, prompts, MAXTOKS)
+    outs, eng, _ = _serve_disagg(cfg, params, mode, prompts, MAXTOKS,
+                                 pool_pages=POOL)
+    assert outs == ref
+    assert eng.stats()["disagg"]["transfers"] >= 1
+
+
+ARRIVAL_CASES = [
+    [0, 0, 0, 0, 0, 0],            # one burst
+    [0, 0, 0, 5, 5, 5],            # two bursts
+    [0, 1, 2, 3, 4, 5],            # steady trickle
+    [0, 0, 9, 9, 0, 4],            # stragglers mid-serve
+]
+
+
+@pytest.mark.parametrize("mode", ["share", "copy"])
+@pytest.mark.parametrize("arrivals", ARRIVAL_CASES)
+def test_disagg_interleaving_bit_identity(setup, mode, arrivals):
+    cfg, params = setup
+    prompts = _prompts(cfg.vocab_size)
+    ref = _serve_ref(cfg, params, prompts, MAXTOKS)
+    outs, _, _ = _serve_disagg(cfg, params, mode, prompts, MAXTOKS,
+                               pool_pages=POOL, arrivals=arrivals)
+    assert outs == ref
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(st.lists(st.tuples(st.integers(1, 14), st.integers(1, 6),
+                              st.integers(0, 3)),
+                    min_size=1, max_size=4),
+           st.integers(0, 2 ** 31 - 1))
+    def test_disagg_interleaving_property(reqs, seed):
+        """Any (prompt_len, max_tokens, arrival_gap) interleaving: the
+        pool-constrained disaggregated engine (share mode, the zero-copy
+        path with the most aliasing hazards) is bit-identical to the
+        fixed engine on the same requests — svasan watching throughout."""
+        import jax
+        cfg = dataclasses.replace(
+            reduce_for_smoke(get_config("llama3.2-1b")), svasan=True)
+        params = init_params(cfg, jax.random.key(0))
+        rng = np.random.default_rng(seed)
+        prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+                   for n, _, _ in reqs]
+        maxtoks = [m for _, m, _ in reqs]
+        arrivals = np.cumsum([g for _, _, g in reqs]).tolist()
+        ref = _serve_ref(cfg, params, prompts, maxtoks)
+        outs, eng, _ = _serve_disagg(cfg, params, "share", prompts,
+                                     maxtoks, pool_pages=POOL,
+                                     arrivals=arrivals)
+        assert outs == ref
+        assert eng.stats()["svasan"]["reports"] == 0
+
+
+# ------------------------------------------------------------------ svasan
+
+@pytest.mark.parametrize("mode", ["share", "copy"])
+def test_migration_svasan_clean(setup, mode):
+    """Migration follows the exact release/admit refcount discipline
+    (share bumps BEFORE the source drop; copy allocates first), so the
+    translation sanitizer sees balanced refcounts across every transfer,
+    deferral, cancellation, and decode-side preemption."""
+    cfg, params = setup
+    cfg = dataclasses.replace(cfg, svasan=True)
+    prompts = _prompts(cfg.vocab_size)
+    outs, eng, _ = _serve_disagg(cfg, params, mode, prompts, MAXTOKS,
+                                 pool_pages=POOL,
+                                 arrivals=[0, 0, 9, 9, 0, 4])
+    s = eng.stats()
+    assert s["disagg"]["transfers"] >= 1
+    assert s["svasan"]["reports"] == 0
+    assert s["svasan"]["checks"] > 0
+
+
+def test_preempt_during_pending_transfer(setup):
+    """Regression: a sequence preempted while its transfer is QUEUED must
+    cancel the transfer (its KV is gone) and re-queue after the resumed
+    prefill completes — without this, the pump migrates a torn-down
+    sequence. Copy mode under the straggler arrivals forces the race."""
+    cfg, params = setup
+    prompts = _prompts(cfg.vocab_size)
+    ref = _serve_ref(cfg, params, prompts, MAXTOKS)
+    outs, eng, _ = _serve_disagg(cfg, params, "copy", prompts, MAXTOKS,
+                                 pool_pages=POOL,
+                                 arrivals=[0, 0, 9, 9, 0, 4])
+    d = eng.stats()["disagg"]
+    assert d["cancelled"] >= 1                   # the race happened
+    assert d["deferred"] >= 1                    # pool pressure deferred too
+    assert outs == ref                           # and changed nothing
+
+
+# ------------------------------------------------------------ trace replay
+
+def test_xfer_trace_replays_end_to_end(setup):
+    """A recorded disaggregated trace carries xfer annotations paired
+    with the source unmap / destination map, and replays through the
+    IOMMU cost model without error."""
+    cfg, params = setup
+    prompts = _prompts(cfg.vocab_size)
+    _, eng, _ = _serve_disagg(cfg, params, "share", prompts, MAXTOKS,
+                              pool_pages=POOL,
+                              record_translation_trace=True)
+    trace = eng.translation_trace
+    kinds = {ev[0] for ev in trace}
+    assert {"xfer", "map", "unmap", "step"} <= kinds
+    n_xfers = sum(1 for ev in trace if ev[0] == "xfer")
+    assert n_xfers == eng.stats()["transfer"]["transfers"]
+    # share-mode destination maps are zero-copy: no fresh pages
+    for i, ev in enumerate(trace):
+        if ev[0] == "xfer":
+            assert ev[3] == "share"
+            assert trace[i + 1][0] == "unmap"
+            assert trace[i + 2][0] == "map" and trace[i + 2][1] == []
+    iommu = IOMMU(walk_model=CountingWalk(), tlb=TLBConfig(8, "lru"))
+    per_step = replay_trace(trace, iommu, kv_bytes_per_token=256,
+                            compute_per_token=10.0, soc=PaperSoCConfig(),
+                            dram_latency=200)
+    assert len(per_step) == sum(1 for ev in trace if ev[0] == "step")
+
+
+# --------------------------------------------------- jit-cache boundedness
+
+def test_disagg_bounded_jit_cache(setup):
+    """The decode worker reuses the colocated masked-decode kernel at
+    FULL slot width (non-decoding rows masked), so disaggregation adds
+    ZERO decode shapes — the bit-identity argument and the no-retracing
+    argument are the same argument."""
+    cfg, params = setup
+    prompts = _prompts(cfg.vocab_size)
+    _, eng, _ = _serve_disagg(cfg, params, "share", prompts, MAXTOKS,
+                              pool_pages=POOL)
+    assert eng._decode_m._cache_size() == 1
+    assert eng._prefill._cache_size() <= np.log2(64) * np.log2(4) + 1

@@ -55,6 +55,21 @@ def test_preemption_bearing_trace_replays():
     assert replay(annotated) == replay(base)
 
 
+def test_xfer_bearing_trace_replays():
+    # A disaggregated migration annotates the hand-off with ("xfer", sid,
+    # n_pages, mode) before the source "unmap" and destination "map" that
+    # carry its translation consequences. Like preempt/resume, the
+    # annotation must not change replay numbers.
+    base = [
+        ("map", [0, 1], 0, [0, 1]),
+        ("unmap", 0, 2),
+        ("map", [], 2, [0, 1]),                # share: same physical pages
+        ("step", [(2, 0, 0), (2, 1, 1)], 2),
+    ]
+    annotated = [base[0], ("xfer", 7, 2, "share")] + base[1:]
+    assert replay(annotated) == replay(base)
+
+
 @pytest.mark.parametrize("bad", [
     ("map",),                     # missing pages
     ("map", [0], 1),              # extended form missing the table row
@@ -68,6 +83,10 @@ def test_preemption_bearing_trace_replays():
     ("preempt", "seq7"),          # seq_id not an int
     ("resume", 7),                # missing pages
     ("resume", 7, 3),             # pages not a sequence
+    ("xfer", 7, 2),               # missing mode
+    ("xfer", 7, 2, "move"),       # mode not copy/share
+    ("xfer", "seq7", 2, "copy"),  # seq_id not an int
+    ("xfer", 7, "2", "copy"),     # n_pages not an int
     "unmap",                      # event not a tuple
     (),                           # empty event
 ])
@@ -85,6 +104,12 @@ def test_error_carries_expected_shape():
     with pytest.raises(TraceFormatError) as ei:
         replay([("unmap", 0)])
     assert '("unmap", slot, n_pages)' in ei.value.expected
+
+
+def test_xfer_error_carries_expected_shape():
+    with pytest.raises(TraceFormatError) as ei:
+        replay([("xfer", 7, 2, "move")])
+    assert '("xfer", seq_id, n_pages, mode)' in ei.value.expected
 
 
 def test_unknown_tag_error_names_the_tag():
