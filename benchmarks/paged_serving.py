@@ -25,6 +25,14 @@ configuration the tuner converged to. ``--prefetch``/``--autotune`` arm
 those knobs on the served engine itself (see ``--help`` and
 ``benchmarks/README.md``).
 
+The default benchmark also runs the range-coalescing A/B
+(``paged_serving.range.*``): the same continuous-batching workload served
+with ``ModelConfig.serve_tlb_ranges`` on vs off must be bit-identical
+(ranges change translation accounting only), and the translation report
+prints ``translation.range.*`` replay rows (range vs per-page at equal
+IOTLB entry count) plus the ``translation.fragmentation.runs_per_seq``
+allocator-contiguity summary. ``--tlb-ranges`` sets the coalescing cap.
+
 ``--dry-run`` runs a minimal-size fast path (CI smoke).
 """
 from __future__ import annotations
@@ -41,7 +49,7 @@ import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from benchmarks.trace_replay import replay_trace
+from benchmarks.trace_replay import replay_trace, trace_fragmentation
 from repro.configs import get_config, reduce_for_smoke
 from repro.configs.paper_soc import PaperSoCConfig
 from repro.core.serving.engine import ServingEngine
@@ -197,7 +205,43 @@ def run_scheduler_ab(dry_run: bool = False) -> List[str]:
     return rows
 
 
-def run(dry_run: bool = False) -> List[str]:
+def run_range_ab(dry_run: bool = False, tlb_ranges: int = 8) -> List[str]:
+    """Range-coalesced IOTLB entries ON vs OFF over the SAME prefix-heavy
+    continuous-batching workload on an oversubscribed pool — admissions,
+    CoW divergence, and preempt/resume teardown all exercise the range
+    fill/split paths live. Outputs must be bit-identical: ranges change
+    translation accounting only, never placement or data movement."""
+    n_req, max_tokens = (4, 4) if dry_run else (8, 8)
+    outs, stats = {}, {}
+    for ranges in (0, tlb_ranges):
+        cfg, params = _cfg_params()
+        cfg = dataclasses.replace(cfg, serve_tlb_ranges=ranges)
+        eng = ServingEngine(cfg, params, n_slots=4, max_len=64, page_size=8,
+                            scheduler="continuous", pool_pages=_BURST_POOL,
+                            translation_stats=True)
+        prompts = _prefix_heavy_prompts(n_req, cfg.vocab_size)
+        rids = [eng.submit(p, max_tokens=max_tokens) for p in prompts]
+        done = eng.run()
+        outs[ranges] = [done[r].out_tokens for r in rids]
+        stats[ranges] = eng.stats()
+    identical = outs[0] == outs[tlb_ranges]
+    s = stats[tlb_ranges]
+    rng = s["iommu"].get("range", {})
+    return [
+        f"paged_serving.range.bit_identical,{identical},"
+        f"continuous serving outputs with range-coalesced IOTLB entries "
+        f"(ranges={tlb_ranges}) vs per-page — translation accounting "
+        f"only, never placement or data movement",
+        f"paged_serving.range.coalesced_pages,"
+        f"{rng.get('coalesced_pages', 0)},"
+        f"pages covered by live range fills (range_entries="
+        f"{rng.get('fills', 0)} hits={rng.get('hits', 0)} "
+        f"range_splits={rng.get('splits', 0)}; contiguity-hinted "
+        f"allocations: run_allocs={s['pool_run_allocs']} "
+        f"run_fallbacks={s['pool_run_fallbacks']})"]
+
+
+def run(dry_run: bool = False, tlb_ranges: int = 8) -> List[str]:
     n_req, max_tokens = (4, 4) if dry_run else (6, 8)
     rows = []
     stats = {}
@@ -300,6 +344,9 @@ def run(dry_run: bool = False) -> List[str]:
 
     # ------------------------------ scheduler A/B on the bursty workload
     rows += run_scheduler_ab(dry_run)
+    # ------------------- range-coalesced IOTLB on/off bit-identity check
+    if tlb_ranges:
+        rows += run_range_ab(dry_run, tlb_ranges=tlb_ranges)
     return rows
 
 
@@ -315,13 +362,56 @@ def _replay(trace, walk_model, tlb: TLBConfig, kv_bytes_per_token: int,
                                compute_per_token, soc, dram_latency)
 
 
+def _range_report_rows(trace, mk_off, soc, kv_tok, compute_per_token,
+                       dram_latency, tlb_ranges, off_iommu, off_steps,
+                       off_pcts) -> List[str]:
+    """Range-coalesced IOTLB entries (SPARTA analogue) on the recorded
+    trace: same 4-entry IOTLB, but one entry may cover a physically
+    contiguous run of up to ``tlb_ranges`` pages — the payoff of the
+    contiguity-aware allocator, priced at EQUAL entry count against the
+    per-page ``llc_off`` baseline. Plus the allocator-side fragmentation
+    summary (runs per admitted sequence) the coalescer depends on."""
+    pct = lambda p, t: 100.0 * p / max(t, 1e-9)
+    rng_iommu = IOMMU(walk_model=mk_off(),
+                      tlb=TLBConfig(soc.iotlb_entries, "lru",
+                                    ranges=tlb_ranges))
+    rng_steps = replay_trace(trace, rng_iommu, kv_tok, compute_per_token,
+                             soc, dram_latency)
+    rng_pcts = [pct(p, t) for p, t in rng_steps]
+    rt, ot = rng_iommu.tlb.stats, off_iommu.tlb.stats
+    rio = rng_iommu.stats()["range"]
+    frag = trace_fragmentation(trace)
+    return [
+        f"translation.range.ptw_pct.mean,{np.mean(rng_pcts):.1f},"
+        f"demand PTW% with range-coalesced entries (ranges={tlb_ranges}) "
+        f"on the {soc.iotlb_entries}-entry IOTLB, no LLC (per-page: "
+        f"{np.mean(off_pcts):.1f}%)",
+        f"translation.range.demand_misses,{rt.misses},"
+        f"demand IOTLB misses vs per-page {ot.misses} at equal entry "
+        f"count (range_entries={rio['fills']} range_hits={rio['hits']} "
+        f"coalesced_pages={rio['coalesced_pages']} "
+        f"range_splits={rio['splits']})",
+        f"translation.range.demand_ptw_cycles,"
+        f"{sum(p for p, _ in rng_steps):.1f},"
+        f"vs per-page {sum(p for p, _ in off_steps):.1f} "
+        f"(one walk fills a whole run; neighbours hit the range)",
+        f"translation.fragmentation.runs_per_seq,"
+        f"{frag['runs_per_seq']:.2f},"
+        f"physically contiguous runs per admitted sequence "
+        f"({frag['runs']} runs / {frag['sequences']} sequences over "
+        f"{frag['pages']} freshly allocated pages; "
+        f"mean_run_pages={frag['mean_run_pages']:.2f}; 1.0 = every "
+        f"admission one run)"]
+
+
 def run_translation_report(dry_run: bool = False,
                            dram_latency: int = 200,
                            prefetch_policy: str = "none",
                            prefetch_degree: int = 2,
                            prefetch_distance: int = 4,
                            autotune: int = 0,
-                           scheduler: str = "fixed") -> List[str]:
+                           scheduler: str = "fixed",
+                           tlb_ranges: int = 8) -> List[str]:
     """Fig. 5 on the serving hot path: serve a prefix-heavy workload with
     translation tracing, then price the recorded per-decode-step page
     accesses under CountingWalk vs Sv39Walk(llc=False/True) behind the
@@ -405,7 +495,7 @@ def run_translation_report(dry_run: bool = False,
                              dram_access_cycles=dram_latency
                              + soc.dram_base_latency,
                              llc=True, to_accel=H2A)
-    _, off_steps = replay(mk_off, soc.iotlb_entries)
+    off_iommu, off_steps = replay(mk_off, soc.iotlb_entries)
     _, on_steps = replay(mk_on, soc.iotlb_entries)
 
     pct = lambda p, t: 100.0 * p / max(t, 1e-9)
@@ -452,6 +542,17 @@ def run_translation_report(dry_run: bool = False,
                 f"cache, no LLC (off: {np.mean(off_pcts):.1f}%; "
                 f"wc hits={wc_stats['hits']} misses={wc_stats['misses']}) "
                 "— full grid: benchmarks/tlb_sweep.py")
+
+    # --------------------- range-coalesced IOTLB entries (SPARTA analogue)
+    # Same trace, same 4-entry IOTLB, but one entry may cover a physically
+    # contiguous run of up to ``tlb_ranges`` pages — the payoff of the
+    # contiguity-aware allocator, priced at EQUAL entry count against the
+    # per-page llc_off baseline above.
+    if tlb_ranges:
+        rows += _range_report_rows(trace, mk_off, soc, kv_tok,
+                                   compute_per_token, dram_latency,
+                                   tlb_ranges, off_iommu, off_steps,
+                                   off_pcts)
 
     # ---------------------------------------- adaptive front-end replays
     # IOTLB prefetching (Kurth et al.): stream-detected walks issued ahead
@@ -570,6 +671,12 @@ if __name__ == "__main__":
                          "pool so the recorded trace bears preempt/resume "
                          "events (the default benchmark always runs the "
                          "fixed-vs-continuous A/B)")
+    ap.add_argument("--tlb-ranges", type=int, default=8,
+                    help="max pages per range-coalesced IOTLB entry (>= 2) "
+                         "for the range on/off serving A/B and the "
+                         "translation.range.* replay rows "
+                         "(ModelConfig.serve_tlb_ranges on the A/B engine; "
+                         "0 disables the range rows)")
     args = ap.parse_args()
     if args.translation_report:
         print("\n".join(run_translation_report(
@@ -577,6 +684,8 @@ if __name__ == "__main__":
             prefetch_policy=args.prefetch,
             prefetch_degree=args.prefetch_degree,
             prefetch_distance=args.prefetch_distance,
-            autotune=args.autotune, scheduler=args.scheduler)))
+            autotune=args.autotune, scheduler=args.scheduler,
+            tlb_ranges=args.tlb_ranges)))
     else:
-        print("\n".join(run(dry_run=args.dry_run)))
+        print("\n".join(run(dry_run=args.dry_run,
+                            tlb_ranges=args.tlb_ranges)))

@@ -34,6 +34,14 @@ Emits the grid + adaptive rows as CSV (``--out``, default
 decode-step runtime per geometry axis, the best static geometry per
 deployment, and the adaptive rows' win/loss against it.
 
+After the adaptive rows, one RANGE row per deployment prices the same
+trace with range-coalesced IOTLB entries (``TLBConfig(ranges=N)``,
+``--ranges``) against the per-page 4-entry baseline at EQUAL entry count —
+the ``range_entries`` / ``coalesced_pages`` / ``range_splits`` columns
+carry the coalescing counters (zero on per-page rows), and the
+``tlb_sweep.range.<deployment>`` summary rows print the demand-miss and
+demand-PTW-cycle deltas.
+
 ``--smoke`` shrinks the grid and the recorded workload (CI smoke path —
 wired into ``benchmarks/run.py --only sweep`` and the figure-benchmarks
 job).
@@ -67,6 +75,7 @@ class Geometry:
     ways: int                 # 0 = fully associative
     policy: str
     wc_entries: int           # 0 = walk cache off
+    ranges: int = 0           # 0 = per-page entries; else max coalesced run
 
     @property
     def resolved_ways(self) -> int:
@@ -74,7 +83,8 @@ class Geometry:
 
     def label(self) -> str:
         w = "full" if self.resolved_ways == self.entries else str(self.ways)
-        return (f"e{self.entries}.w{w}.{self.policy}.wc{self.wc_entries}")
+        r = f".r{self.ranges}" if self.ranges else ""
+        return (f"e{self.entries}.w{w}.{self.policy}.wc{self.wc_entries}{r}")
 
 
 def sweep_grid(smoke: bool = False) -> List[Geometry]:
@@ -173,7 +183,8 @@ def replay_geometry(trace, geom: Geometry, kv_bytes_per_token: int,
         llc=False, to_accel=H2A,
         walk_cache=WalkCacheConfig(geom.wc_entries, policy="lru"))
     iommu = IOMMU(walk_model=walker,
-                  tlb=TLBConfig(geom.entries, geom.policy, ways=geom.ways),
+                  tlb=TLBConfig(geom.entries, geom.policy, ways=geom.ways,
+                                ranges=geom.ranges),
                   prefetch=prefetch or PrefetchConfig())
     tuner = TLBAutoTuner(iommu, autotune) if autotune is not None else None
     per_step = replay_trace(trace, iommu, kv_bytes_per_token,
@@ -197,7 +208,11 @@ def replay_geometry(trace, geom: Geometry, kv_bytes_per_token: int,
         prefetch_issued=tlb.prefetch_issued,
         prefetch_useful=tlb.prefetch_useful,
         prefetch_late=tlb.prefetch_late,
-        demand_ptw_cycles=round(sum(p for p, _ in per_step), 1))
+        demand_ptw_cycles=round(sum(p for p, _ in per_step), 1),
+        # range-coalescing counters (all zero on per-page rows)
+        range_entries=iommu.range_fills,
+        coalesced_pages=iommu.coalesced_pages,
+        range_splits=iommu.range_splits)
     if tuner is not None:
         ts = tuner.stats()
         row["n_entries"] = ts["current"]["n_entries"]   # converged geometry
@@ -211,7 +226,8 @@ FIELDS = ("deployment", "n_entries", "ways", "policy", "wc_entries",
           "tlb_hits", "tlb_misses", "conflict_misses", "hit_rate", "walks",
           "wc_hits", "wc_misses", "ptw_cycles", "ptw_pct_mean",
           "ptw_pct_max", "adaptive", "prefetch_issued", "prefetch_useful",
-          "prefetch_late", "demand_ptw_cycles")
+          "prefetch_late", "demand_ptw_cycles", "range_entries",
+          "coalesced_pages", "range_splits")
 
 
 def adaptive_rows(trace, best_geom: Geometry, consts: dict,
@@ -246,7 +262,7 @@ def adaptive_rows(trace, best_geom: Geometry, consts: dict,
 
 
 def run(smoke: bool = False, out: str = "tlb_sweep.csv",
-        dram_latency: int = 200) -> List[str]:
+        dram_latency: int = 200, ranges: int = 8) -> List[str]:
     traces, consts = record_traces(dry_run=smoke)
     grid = sweep_grid(smoke)
     rows: List[str] = []
@@ -278,6 +294,16 @@ def run(smoke: bool = False, out: str = "tlb_sweep.csv",
                                       dram_latency, smoke=smoke)
         for r in adaptive[dep]:
             r["deployment"] = dep
+    # Range-coalescing A/B at EQUAL ENTRY COUNT: the paper's 4-entry
+    # fully-assoc lru IOTLB per-page (the static grid row) vs the same
+    # geometry with range entries covering up to ``ranges`` pages each.
+    range_ab: Dict[str, dict] = {}
+    for dep, trace in traces.items():
+        r = replay_geometry(trace, Geometry(4, 0, "lru", 0, ranges=ranges),
+                            dram_latency=dram_latency,
+                            adaptive=f"range:r{ranges}", **consts)
+        r["deployment"] = dep
+        range_ab[dep] = r
 
     with open(out, "w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=FIELDS, extrasaction="ignore")
@@ -286,8 +312,9 @@ def run(smoke: bool = False, out: str = "tlb_sweep.csv",
             w.writerows(results[dep])
         for dep in adaptive:
             w.writerows(adaptive[dep])
+        w.writerows(range_ab.values())
     n_rows = sum(len(v) for v in results.values()) \
-        + sum(len(v) for v in adaptive.values())
+        + sum(len(v) for v in adaptive.values()) + len(range_ab)
     rows.append(f"tlb_sweep.grid,{len(grid)},geometries x "
                 f"{len(results)} deployments + "
                 f"{sum(len(v) for v in adaptive.values())} adaptive rows "
@@ -346,6 +373,19 @@ def run(smoke: bool = False, out: str = "tlb_sweep.csv",
                 f"static {b['demand_ptw_cycles']} "
                 f"(ptw_pct_mean={r['ptw_pct_mean']:.2f} vs "
                 f"{b['ptw_pct_mean']:.2f}){extra}")
+        # -------------- range coalescing vs per-page at equal entry count
+        pp = next(r for r in rs
+                  if r["n_entries"] == 4 and r["ways"] == 4
+                  and r["policy"] == "lru" and r["wc_entries"] == 0)
+        rr = range_ab[dep]
+        rows.append(
+            f"tlb_sweep.range.{dep},{rr['demand_ptw_cycles']},"
+            f"demand PTW cycles @ ranges={ranges} vs per-page "
+            f"{pp['demand_ptw_cycles']} at equal entry count (e4 full lru "
+            f"wc0; demand misses {rr['tlb_misses']} vs {pp['tlb_misses']}; "
+            f"range_entries={rr['range_entries']} "
+            f"coalesced_pages={rr['coalesced_pages']} "
+            f"splits={rr['range_splits']})")
     return rows
 
 
@@ -357,6 +397,11 @@ if __name__ == "__main__":
                     help="full-grid CSV output path")
     ap.add_argument("--dram-latency", type=int, default=200,
                     help="AXI delayer setting for the Sv39 walk replay")
+    ap.add_argument("--ranges", type=int, default=8,
+                    help="max pages per range-coalesced IOTLB entry for the "
+                         "range A/B rows (>= 2; the per-page baseline rows "
+                         "are unaffected)")
     args = ap.parse_args()
     print("\n".join(run(smoke=args.smoke, out=args.out,
-                        dram_latency=args.dram_latency)))
+                        dram_latency=args.dram_latency,
+                        ranges=args.ranges)))

@@ -12,11 +12,17 @@ Trace events (recorded by ``ServingEngine(record_translation_trace=True)``):
                                 replay IOMMU's address space, so a replaying
                                 IOTLB *prefetcher* can resolve upcoming
                                 logical pages the way hardware reads the
-                                page table. Replay numbers WITHOUT a
-                                prefetcher are bit-identical for both forms
-                                (demand accesses carry their physical page
-                                in the trace; the table feeds only the
-                                prefetcher).
+                                page table, and the page list doubles as the
+                                CONTIGUITY SIGNAL for a range-aware replay
+                                IOMMU (``TLBConfig(ranges=N)``): the freshly
+                                mapped pages land at the row's logical tail,
+                                and physically contiguous runs among them
+                                warm as range entries exactly like the live
+                                engine's map path. Replay numbers WITHOUT a
+                                prefetcher or range entries are bit-identical
+                                for both forms (demand accesses carry their
+                                physical page in the trace; the table feeds
+                                only the prefetcher and the range coalescer).
   ("step",  accesses, tokens)   one decode step's (slot, lp, phys) gathers
   ("unmap", slot, n_pages)      release: per-ASID self-invalidation (TLB
                                 entries + prefetcher state die with the
@@ -104,6 +110,15 @@ def _validate_event(i: int, ev) -> str:
     if kind == "map":
         if len(ev) not in (2, 4) or isinstance(ev[1], (str, int, float)):
             raise TraceFormatError(i, ev, _EVENT_SHAPES["map"])
+        if len(ev) == 4:
+            # The extended form's page list is the range coalescer's
+            # contiguity signal — validate it (and the row) up front so a
+            # malformed trace fails at the event, not inside a warm fill.
+            if (not isinstance(ev[2], int)
+                    or isinstance(ev[3], (str, int, float))
+                    or not all(isinstance(p, int) for p in ev[1])
+                    or not all(isinstance(p, int) for p in ev[3])):
+                raise TraceFormatError(i, ev, _EVENT_SHAPES["map"])
     elif kind == "unmap":
         if len(ev) != 3 or not all(isinstance(x, int) for x in ev[1:]):
             raise TraceFormatError(i, ev, _EVENT_SHAPES["unmap"])
@@ -130,13 +145,59 @@ def _install_row(iommu: IOMMU, slot: int, row) -> None:
     """Install a slot's logical->physical table into the replay IOMMU
     (attaching the space on first sight). The TLB is NOT warmed — the
     recorded demand stream decides what gets cached; only the prefetcher
-    reads the table."""
+    (and, via :func:`_warm_ranges`, the range coalescer) reads the table."""
     sp = iommu.space(slot)
     if sp is None:
         sp = iommu.attach(slot)
     sp.table.clear()
     for lp, pp in enumerate(row):
         sp.table[lp] = pp
+
+
+def _warm_ranges(iommu: IOMMU, slot: int, pages, row) -> None:
+    """Replay the extended map form's page list as the contiguity signal:
+    the freshly mapped pages are the row's logical tail (the engine records
+    ``pages = st.pages[shared:]``, ``row = st.pages``), so a range-aware
+    replay IOMMU warms physically contiguous runs among them as range
+    entries — the same map-time coalescing the live engine performs (range
+    entries only: singleton pages stay cold, so the per-page baseline
+    replay, which never warms, stays apples-to-apples). A page list that
+    is not the row's tail (hand-edited trace) is skipped: demand-side
+    coalescing still prices it correctly."""
+    if not iommu.range_max or not pages:
+        return
+    start = len(row) - len(pages)
+    if start < 0 or list(row[start:]) != list(pages):
+        return
+    iommu._warm_fill_runs(slot, start, list(pages), singles=False)
+
+
+def runs_in(pages) -> int:
+    """Number of maximal physically-contiguous runs in a page list (1 run
+    == perfectly contiguous; ``len(pages)`` == fully fragmented)."""
+    pages = list(pages)
+    if not pages:
+        return 0
+    return 1 + sum(1 for a, b in zip(pages, pages[1:]) if b != a + 1)
+
+
+def trace_fragmentation(trace) -> dict:
+    """Physical-contiguity summary of a recorded trace's admissions: how
+    many maximal contiguous runs each sequence's freshly allocated pages
+    form (extended ``("map", pages, slot, row)`` events only — the short
+    form carries no per-sequence attribution). ``runs_per_seq`` == 1.0
+    means every admission got one contiguous run (ideal for range
+    coalescing); higher values quantify allocator fragmentation."""
+    seqs = runs = pages = 0
+    for i, ev in enumerate(trace):
+        if _validate_event(i, ev) == "map" and len(ev) == 4 and ev[1]:
+            seqs += 1
+            runs += runs_in(ev[1])
+            pages += len(ev[1])
+    return dict(
+        sequences=seqs, runs=runs, pages=pages,
+        runs_per_seq=(runs / seqs) if seqs else 0.0,
+        mean_run_pages=(pages / runs) if runs else 0.0)
 
 
 def replay_trace(trace, iommu: IOMMU, kv_bytes_per_token: int,
@@ -158,6 +219,7 @@ def replay_trace(trace, iommu: IOMMU, kv_bytes_per_token: int,
             iommu.host_map_pass(ev[1])
             if len(ev) >= 4:
                 _install_row(iommu, ev[2], ev[3])
+                _warm_ranges(iommu, ev[2], ev[1], ev[3])
         elif kind == "unmap":
             _, slot, n_pages = ev
             # Mirror the live engine's release -> detach: a per-ASID

@@ -62,6 +62,11 @@ ap.add_argument("--tlb-autotune", type=int, default=0, metavar="STEPS",
                 help="auto-tune the serving TLB geometry online with this "
                      "measurement window in decode steps "
                      "(ModelConfig.serve_tlb_autotune; 0 = off)")
+ap.add_argument("--tlb-ranges", type=int, default=0, metavar="N",
+                help="range-coalesced IOTLB entries: one entry covers a "
+                     "physically contiguous run of up to N pages "
+                     "(ModelConfig.serve_tlb_ranges; 0 = per-page, else "
+                     ">= 2 — watch the range: block in the IOMMU stats)")
 ap.add_argument("--scheduler", default="fixed",
                 choices=("fixed", "continuous"),
                 help="continuous = token-budget scheduling with chunked "
@@ -87,6 +92,7 @@ cfg = dataclasses.replace(
     serve_tlb_prefetch_degree=args.tlb_prefetch_degree,
     serve_tlb_prefetch_distance=args.tlb_prefetch_distance,
     serve_tlb_autotune=args.tlb_autotune,
+    serve_tlb_ranges=args.tlb_ranges,
     # Small-TLB demo geometry when auto-tuning, so the ladder has room to
     # differentiate within a short example run.
     serve_tlb_entries=64 if args.tlb_autotune else cfg.serve_tlb_entries)
@@ -150,6 +156,14 @@ print(f"SVA: {s['sva']}")
 print(f"TLB: {s['tlb']}")
 print(f"IOMMU: {s['iommu']}  (unified front-end; the simulator's 4-entry "
       "IOTLB is the same class)")
+if "range" in s["iommu"]:
+    rg = s["iommu"]["range"]
+    print(f"range entries (<= {rg['max_run']} pages each): "
+          f"fills={rg['fills']} hits={rg['hits']} "
+          f"coalesced_pages={rg['coalesced_pages']} splits={rg['splits']} "
+          f"resident={rg['n_ranges']}; contiguity-hinted allocs: "
+          f"run_allocs={s['pool_run_allocs']} "
+          f"fallbacks={s['pool_run_fallbacks']}")
 if "autotune" in s["iommu"]:
     at = s["iommu"]["autotune"]
     print(f"auto-tuner: phase={at['phase']} switches={at['switches']} "

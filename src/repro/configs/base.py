@@ -122,6 +122,12 @@ class ModelConfig:
     serve_tlb_entries: int = 4096
     serve_tlb_ways: int = 0                 # 0 = fully associative
     serve_tlb_policy: str = "lru"           # lru | fifo | lfu | random | gdsfs
+    # Range-coalesced IOTLB entries (SPARTA-style): the max physically
+    # contiguous run one entry may cover. 0 = per-page entries only
+    # (bit-identical to the historical front-end); >= 2 arms coalescing —
+    # translation accounting only, never data movement, so serving
+    # outputs stay bit-identical range-on vs range-off.
+    serve_tlb_ranges: int = 0
     # IOTLB prefetching on the decode gather stream (Kurth et al.,
     # MMU-aware DMA prefetch): none | next_page | stream, with the issue
     # degree and the stream run-ahead distance. Defaults off.
@@ -206,6 +212,10 @@ class ModelConfig:
                 f"{self.name}: serve_tlb_ways={ways} must divide "
                 f"serve_tlb_entries={self.serve_tlb_entries} "
                 "(0 = fully associative)")
+        if self.serve_tlb_ranges < 0 or self.serve_tlb_ranges == 1:
+            raise ValueError(
+                f"{self.name}: serve_tlb_ranges={self.serve_tlb_ranges} "
+                "(0 = off, else the max coalesced run length, >= 2)")
         blk = len(self.block_pattern)
         body = self.n_layers - self.first_k_dense
         if body % blk != 0:

@@ -279,8 +279,11 @@ class ServingEngine:
         autotune = None
         if cfg.serve_tlb_autotune:
             base_tlb = TLBConfig(cfg.serve_tlb_entries, cfg.serve_tlb_policy,
-                                 ways=cfg.serve_tlb_ways)
-            cands = tuple(TLBConfig(e, p, ways=w) for e, w, p
+                                 ways=cfg.serve_tlb_ways,
+                                 ranges=cfg.serve_tlb_ranges)
+            cands = tuple(TLBConfig(e, p, ways=w,
+                                    ranges=cfg.serve_tlb_ranges)
+                          for e, w, p
                           in cfg.serve_tlb_autotune_candidates) \
                 or default_autotune_candidates(base_tlb)
             autotune = AutoTuneConfig(interval_steps=cfg.serve_tlb_autotune,
@@ -294,6 +297,7 @@ class ServingEngine:
                                   tlb_entries=cfg.serve_tlb_entries,
                                   tlb_policy=cfg.serve_tlb_policy,
                                   tlb_ways=cfg.serve_tlb_ways,
+                                  tlb_ranges=cfg.serve_tlb_ranges,
                                   # None defers to REPRO_SVASAN (svasan)
                                   sanitize=True if cfg.svasan else None,
                                   tlb_prefetch=prefetch,

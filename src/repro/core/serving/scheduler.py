@@ -38,7 +38,12 @@ resolves:
             re-injected by the final chunk instead of an argmax — so a
             preempt/resume round-trip is bit-identical to never having
             been preempted, whether the KV re-matches warm pages or is
-            recomputed from tokens.
+            recomputed from tokens. Re-admission goes through the same
+            ``PagedKVManager.admit`` path as a fresh sequence, so its
+            fresh pages are re-allocated with the contiguity hint
+            (``PagePool.alloc_run``) — a resumed sequence re-tries
+            contiguous placement and stays eligible for range-coalesced
+            IOTLB entries even after its original run was torn down.
 
 The scheduler mutates manager state (admit/preempt/resume) and the
 :class:`~repro.core.serving.sequence_buffer.SequenceBuffer`, and returns a

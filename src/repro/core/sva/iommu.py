@@ -28,6 +28,19 @@ with/without the shared LLC and with/without a hardware walk cache
 (``Sv39Walk``). ``benchmarks/tlb_sweep.py`` sweeps these axes over
 recorded serving traces.
 
+Range-coalesced IOTLB entries (``TLBConfig(ranges=N)``, SPARTA-style,
+PAPERS.md): when the page table shows a physically contiguous run around
+a translation, ONE entry ``(asid, base_lpn, n_pages) -> base_ppn`` covers
+up to N pages — installed opportunistically at map-time pre-warm and on
+demand-miss fills, weighted ``span=n_pages`` under gdsfs, set-indexed on
+``base_lpn``. Invalidation is range-granular: a partial unmap or CoW
+remap SPLITS a covering range into its surviving segments (a range entry
+never outlives a split; the svasan stale-range detector checks exactly
+this). Resident ranges are kept disjoint, so a lookup has at most one
+covering entry. ``ranges=0`` (default) is bit-identical to the per-page
+front-end; coalescing changes translation accounting only, never data
+movement. Counters land in the ``range:`` stats block.
+
 Adaptive front-end (this is where the design space stops being static):
 
   * ``PrefetchConfig(policy="none|next_page|stream", degree, distance)``
@@ -86,6 +99,9 @@ class TLBConfig:
     policy: str = "lru"           # lru | fifo | lfu | random
     seed: int = 0                 # random-policy determinism (trace parity)
     ways: int = 0                 # 0 = fully associative (== n_entries)
+    ranges: int = 0               # max pages one range entry may coalesce
+                                  # (0 = per-page entries only; >= 2 arms
+                                  # SPARTA-style range coalescing)
 
     def __post_init__(self):
         if self.n_entries < 1:
@@ -98,6 +114,10 @@ class TLBConfig:
             raise ValueError(
                 f"ways={self.ways} must divide n_entries={self.n_entries} "
                 f"(1 <= ways <= n_entries; 0 = fully associative)")
+        if self.ranges < 0 or self.ranges == 1:
+            raise ValueError(
+                f"ranges={self.ranges} (0 = off, else the max coalesced "
+                "run length, >= 2)")
 
     @property
     def resolved_ways(self) -> int:
@@ -214,7 +234,8 @@ def default_autotune_candidates(base: TLBConfig) -> Tuple[TLBConfig, ...]:
     out = []
     for e in entries:
         ways = base.ways if base.ways and e % base.ways == 0 else 0
-        out.append(TLBConfig(e, base.policy, seed=base.seed, ways=ways))
+        out.append(TLBConfig(e, base.policy, seed=base.seed, ways=ways,
+                             ranges=base.ranges))
     return tuple(out)
 
 
@@ -410,12 +431,17 @@ class IOAddressSpace:
         """Install logical pages ``[start, start+len)`` -> ``pages`` and run
         the Listing-1 host map pass (PTE writes land in the LLC). ``warm``
         additionally pre-fills the device TLB (the driver's map-then-offload
-        pattern leaves translations hot)."""
+        pattern leaves translations hot) — with range coalescing armed,
+        physically contiguous chunks warm as single range entries."""
         for lp, pp in enumerate(pages, start=start):
             self.table[lp] = pp
-            if warm:
-                # host pre-warm, NOT a device page-table walk
-                self.iommu.tlb.fill((self.asid, lp), pp, walked=False)
+        if warm:
+            if self.iommu.range_max:
+                self.iommu._warm_fill_runs(self.asid, start, pages)
+            else:
+                for lp, pp in enumerate(pages, start=start):
+                    # host pre-warm, NOT a device page-table walk
+                    self.iommu.tlb.fill((self.asid, lp), pp, walked=False)
         self.iommu.host_map_pass(pages)
 
     def extend(self, pages: Sequence[int]) -> None:
@@ -485,8 +511,15 @@ class IOMMU:
         self.walk_model: WalkModel = walk_model or CountingWalk()
         self.tlb_config = tlb
         self.tlb = TranslationCache(tlb.n_entries, policy=tlb.policy,
-                                    seed=tlb.seed, ways=tlb.ways)
+                                    seed=tlb.seed, ways=tlb.ways,
+                                    range_aware=bool(tlb.ranges))
         self.prefetch_config = prefetch
+        # Range-coalescing counters (the ``range:`` stats block; only
+        # reported when ``tlb.ranges`` arms coalescing).
+        self.range_fills = 0          # range entries installed
+        self.range_hits = 0           # demand hits served by a range entry
+        self.coalesced_pages = 0      # pages covered by installed ranges
+        self.range_splits = 0         # ranges split by partial invalidation
         # Prefetcher state: fills issued but not yet completed (they install
         # at the START of the next demand translate — arriving demand for a
         # pending key is a LATE prefetch), installed-but-never-demanded keys
@@ -544,6 +577,118 @@ class IOMMU:
     def n_spaces(self) -> int:
         return len(self._spaces)
 
+    @property
+    def range_max(self) -> int:
+        """Max pages one range entry may cover (0 = coalescing off)."""
+        return self.tlb_config.ranges
+
+    # ------------------------------------------------------- range entries
+    def _warm_fill_runs(self, asid: int, start: int,
+                        pages: Sequence[int],
+                        singles: bool = True) -> None:
+        """Map-time pre-warm with coalescing: physically contiguous chunks
+        of the mapped pages (capped at ``range_max``) warm as one range
+        entry each; singletons warm per-page (``singles=False`` skips them
+        — the trace replay uses this so its per-page baseline, which never
+        warms, stays an apples-to-apples comparison). Falls back to
+        per-page fills for a chunk that would overlap a resident range
+        (ranges stay disjoint — the invariant every lookup leans on)."""
+        i, n = 0, len(pages)
+        while i < n:
+            j = i + 1
+            while (j < n and pages[j] == pages[j - 1] + 1
+                   and j - i < self.range_max):
+                j += 1
+            lp, run = start + i, j - i
+            if run >= 2 and not self.tlb.ranges_overlapping(
+                    asid, lp, lp + run - 1):
+                for k in range(lp, lp + run):    # drop subsumed exact keys
+                    if (asid, k) in self.tlb:
+                        self.tlb.invalidate_key((asid, k))
+                self.tlb.fill((asid, lp, run), pages[i], walked=False,
+                              span=float(run))
+                self.range_fills += 1
+                self.coalesced_pages += run
+            elif singles:
+                for k in range(run):
+                    self.tlb.fill((asid, lp + k), pages[i + k], walked=False)
+            i = j
+
+    def _try_coalesce(self, sp: IOAddressSpace, asid: int, page: int,
+                      phys: int, cost: float) -> bool:
+        """Opportunistic range fill on a demand miss: when the space's table
+        shows a physically contiguous run around ``page``, install ONE range
+        entry covering it (capped at ``range_max``, anchored at the demand
+        page — extend down, then up). Resident exact keys inside the run are
+        subsumed; resident ranges fully inside it are replaced; any partial
+        overlap bails to a per-page fill (ranges stay disjoint). Returns
+        True when a range entry was installed."""
+        table = sp.table
+        max_run = self.range_max
+        lo, hi = page, page
+        while (page - lo) + 1 < max_run and table.get(lo - 1) == \
+                phys - (page - lo) - 1:
+            lo -= 1
+        while (hi - lo) + 1 < max_run and table.get(hi + 1) == \
+                phys + (hi - page) + 1:
+            hi += 1
+        n = hi - lo + 1
+        if n < 2:
+            return False
+        base_ppn = phys - (page - lo)
+        for b, bn in self.tlb.ranges_overlapping(asid, lo, hi):
+            if b < lo or b + bn - 1 > hi:
+                return False                     # partial overlap: bail
+        for b, bn in self.tlb.ranges_overlapping(asid, lo, hi):
+            self.tlb.invalidate_key((asid, b, bn))
+        for lp in range(lo, hi + 1):
+            k = (asid, lp)
+            if k in self.tlb:
+                self.tlb.invalidate_key(k)
+                self._prefetched.discard(k)
+        self.tlb.fill((asid, lo, n), base_ppn, cost=cost, span=float(n))
+        self.range_fills += 1
+        self.coalesced_pages += n
+        return True
+
+    def _split_ranges_for(self,
+                          keys: List[Tuple[int, int]]) -> None:
+        """Range-granular invalidation: a range entry covering any of the
+        dead ``(asid, lp)`` keys is removed and its SURVIVING maximal
+        segments re-installed (length 1 -> exact key, length >= 2 -> a
+        narrower range). A range entry never outlives a split — the
+        correctness surface CoW remaps and partial unmaps ride on."""
+        dead: Dict[int, set] = {}
+        for asid, lp in keys:
+            dead.setdefault(asid, set()).add(lp)
+        for asid, lps in dead.items():
+            lo, hi = min(lps), max(lps)
+            for base, n in self.tlb.ranges_overlapping(asid, lo, hi):
+                covered = set(range(base, base + n))
+                if not (covered & lps):
+                    continue
+                base_ppn = self.tlb.peek((asid, base, n))
+                self.tlb.invalidate_key((asid, base, n))
+                survivors = sorted(covered - lps)
+                if survivors:
+                    self.range_splits += 1
+                seg_lo = None
+                prev = None
+                for lp in survivors + [None]:    # sentinel flushes last seg
+                    if seg_lo is not None and (lp is None or lp != prev + 1):
+                        seg_n = prev - seg_lo + 1
+                        seg_pp = base_ppn + (seg_lo - base)
+                        if seg_n == 1:
+                            self.tlb.fill((asid, seg_lo), seg_pp,
+                                          walked=False)
+                        else:
+                            self.tlb.fill((asid, seg_lo, seg_n), seg_pp,
+                                          walked=False, span=float(seg_n))
+                        seg_lo = None
+                    if lp is not None and seg_lo is None:
+                        seg_lo = lp
+                    prev = lp
+
     # --------------------------------------------------------- translation
     def translate(self, asid: int, page: int,
                   phys: Optional[int] = None) -> Tuple[int, float, bool]:
@@ -566,15 +711,36 @@ class IOMMU:
         timely prefetched hit costs 0 like any other hit.
         """
         pf = self.prefetch_config.enabled
+        ranges = self.range_max
         key = (asid, page)
         late_cost = 0.0
         if pf and self._pending:
             late_cost = self._install_pending(key)
-        val, hit = self.tlb.lookup(key)
+        rng = None
+        if ranges and key not in self.tlb:
+            # No exact entry — a resident range may still cover the page.
+            # ONE counting lookup either way (range key on coverage, exact
+            # key otherwise so the miss lands in the right set).
+            rng = self.tlb.range_covering(asid, page)
+        if rng is not None:
+            base, n = rng
+            base_ppn, hit = self.tlb.lookup((asid, base, n))
+            val = base_ppn + (page - base) if hit else None
+            if hit:
+                self.range_hits += 1
+        else:
+            val, hit = self.tlb.lookup(key)
         if hit and phys is not None and val != phys:
             self.tlb.stats.hits -= 1             # stale: account as a miss
             self.tlb.stats.misses += 1
-            self.tlb.invalidate_key(key)
+            if rng is not None:
+                # stale range hit: the covering range must not survive the
+                # page it mis-translates — split it, like hardware after
+                # the remap's range-granular invalidation
+                self.range_hits -= 1
+                self._split_ranges_for([key])
+            else:
+                self.tlb.invalidate_key(key)
             self._prefetched.discard(key)
             hit = False
             late_cost = 0.0
@@ -605,7 +771,13 @@ class IOMMU:
             else:
                 phys = page
         cost = self.walk_model.walk(asid, phys, vpn=page)
-        self.tlb.fill(key, phys, cost=cost)
+        # coalesce only when the live table agrees with the filled value
+        # (replay ground truth can disagree after an unseen remap)
+        coalesced = (bool(ranges) and sp is not None
+                     and sp.table.get(page) == phys
+                     and self._try_coalesce(sp, asid, page, phys, cost))
+        if not coalesced:
+            self.tlb.fill(key, phys, cost=cost)
         self._prefetched.discard(key)   # prefetched once, evicted before use
         if sp is not None and page not in sp.table:
             sp._untracked_fills = True
@@ -673,6 +845,9 @@ class IOMMU:
             key = (asid, lp)
             if key in self.tlb or key in self._pending:
                 continue
+            if self.range_max and \
+                    self.tlb.range_covering(asid, lp) is not None:
+                continue                 # a range entry already covers it
             if sp is not None:
                 pp = sp.table.get(lp)
                 if pp is None:
@@ -708,10 +883,15 @@ class IOMMU:
           invalidate(pages=[(a, lp)])  drop specific translations
         """
         if pages is not None:
-            for key in pages:
+            keys = list(pages)
+            for key in keys:
                 self.tlb.invalidate_key(key)
                 self._pending.pop(key, None)
                 self._prefetched.discard(key)
+            if self.range_max:
+                # range-granular: a range covering a dead page splits into
+                # its surviving segments (never outlives the invalidation)
+                self._split_ranges_for(keys)
             return
         if asid is not None:
             for key in self.tlb.keys():
@@ -742,7 +922,8 @@ class IOMMU:
         stats = self.tlb.stats
         self.tlb_config = tlb
         self.tlb = TranslationCache(tlb.n_entries, policy=tlb.policy,
-                                    seed=tlb.seed, ways=tlb.ways)
+                                    seed=tlb.seed, ways=tlb.ways,
+                                    range_aware=bool(tlb.ranges))
         self.tlb.stats = stats
         self.tlb.stats.invalidations += 1
         self._pending.clear()
@@ -779,10 +960,17 @@ class IOMMU:
                 issued=ts.prefetch_issued, useful=ts.prefetch_useful,
                 late=ts.prefetch_late,
                 walk_cache_prefills=self.walk_cache_prefills)
-        return {"tlb": self.tlb.stats.as_dict(),
-                "walk": walk,
-                "epoch": self.epoch,
-                "asids": self.n_spaces}
+        out = {"tlb": self.tlb.stats.as_dict(),
+               "walk": walk,
+               "epoch": self.epoch,
+               "asids": self.n_spaces}
+        if self.range_max:
+            out["range"] = dict(
+                max_run=self.range_max, n_ranges=self.tlb.n_ranges,
+                fills=self.range_fills, hits=self.range_hits,
+                coalesced_pages=self.coalesced_pages,
+                splits=self.range_splits)
+        return out
 
 
 class TLBAutoTuner:

@@ -453,7 +453,7 @@ class PagedKVManager:
                  layout: Optional[str] = None, prefix_sharing: bool = True,
                  prefix_policy: str = "lru", prefix_cap_pages: int = 0,
                  tlb_entries: int = 4096, tlb_policy: str = "lru",
-                 tlb_ways: int = 0,
+                 tlb_ways: int = 0, tlb_ranges: int = 0,
                  tlb_prefetch: Optional[PrefetchConfig] = None,
                  autotune: Optional[AutoTuneConfig] = None,
                  prefix_autotune: int = 0,
@@ -512,7 +512,7 @@ class PagedKVManager:
         # the simulator configures as a 4-entry hardware IOTLB + Sv39 walk.
         self.iommu = IOMMU(walk_model=CountingWalk(),
                            tlb=TLBConfig(tlb_entries, tlb_policy,
-                                         ways=tlb_ways),
+                                         ways=tlb_ways, ranges=tlb_ranges),
                            prefetch=tlb_prefetch or PrefetchConfig())
         # Online geometry auto-tuner (default off): translate_step advances
         # it one window per decode step; a geometry switch is a flush +
@@ -575,13 +575,16 @@ class PagedKVManager:
                 f"{self.pool_pages}")
         return need
 
-    def _alloc_evicting(self, n: int) -> List[int]:
+    def _alloc_evicting(self, n: int, run: bool = False) -> List[int]:
         """Global-pool alloc that evicts warm prefix-cache entries (per the
         index's lru/lfu policy) under ``OutOfPages`` pressure before giving
-        up."""
+        up. ``run=True`` (admission's contiguity hint) asks for a
+        physically contiguous run first — the substrate range-coalesced
+        IOTLB entries form over — falling back to discontiguous pages
+        when fragmentation leaves no run."""
         while True:
             try:
-                return self.pool.alloc(n)
+                return self.pool.alloc_run(n) if run else self.pool.alloc(n)
             except OutOfPages:
                 if self.prefix is None or not self.prefix.evict_one(self.pool):
                     raise
@@ -636,7 +639,9 @@ class PagedKVManager:
                 self.pool.share(shared)     # hold before eviction can run
         if self.layout == "global":
             try:
-                fresh = self._alloc_evicting(need - len(shared))
+                # contiguity hint: a sequence's fresh pages try to land as
+                # one physical run so they warm/coalesce into a range entry
+                fresh = self._alloc_evicting(need - len(shared), run=True)
             except OutOfPages:
                 if shared:
                     self.pool.free(shared)
@@ -902,7 +907,7 @@ class PagedKVManager:
         n = len(st.pages)
         # Copy mode allocates FIRST so OutOfPages leaves nothing mutated.
         if mode == "copy":
-            new_pages = self._alloc_evicting(n)
+            new_pages = self._alloc_evicting(n, run=True)
         ts = self.transfer_stats
         # --- price the hand-off: source ASID translates every page through
         # the transfer fabric's IOMMU (remote DMA by virtual address).
@@ -1069,6 +1074,8 @@ class PagedKVManager:
                        "tlb_policy": self.iommu.tlb_config.policy}
         if self.autotuner is not None:
             iommu_block["autotune"] = self.autotuner.stats()
+        if "range" in io:
+            iommu_block["range"] = io["range"]
         out = {"sva": self.sva_stats.as_dict(),
                "tlb": io["tlb"],
                "iommu": iommu_block,
@@ -1077,6 +1084,9 @@ class PagedKVManager:
                "pool_high_water": high,
                "pool_utilization": round(util, 4),
                "pool_shares": sum(p.stats.shares for p in pools),
+               "pool_run_allocs": sum(p.stats.run_allocs for p in pools),
+               "pool_run_fallbacks": sum(p.stats.run_fallbacks
+                                         for p in pools),
                "cow_copies": sum(p.stats.cow_copies for p in pools),
                "preemptions": self.preemptions,
                "resumes": self.resumes}

@@ -29,6 +29,10 @@ Detectors (each has an injected-bug test in tests/test_svasan.py):
   stale-prefetch            a prefetch fill installed for, or surviving
                             past, a dead mapping (in-flight fills must die
                             with their unmap/detach)
+  stale-range               a range-coalesced IOTLB entry ``(asid, base,
+                            n)`` still *covers* a logical page after its
+                            unmap — the range outlived the split that the
+                            partial invalidation should have forced
   leak-at-release           ``PagedKVManager.release`` returned without
                             dropping the sequence's reference on one of its
                             pages
@@ -80,7 +84,9 @@ class SvasanReport:
     injected-bug tests assert on."""
     detector: str                 # double-free | translate-after-unmap | ...
     page: Optional[int]           # physical page (pool detectors)
-    key: Optional[Tuple[int, int]]  # (asid, logical page) (iommu detectors)
+    # (asid, logical page) for exact-entry detectors, (asid, base, n) for
+    # the stale-range detector.
+    key: Optional[Tuple[int, ...]]
     state: str                    # shadow state at detection time
     message: str
 
@@ -136,7 +142,7 @@ class SVASanitizer:
 
     def _report(self, detector: str, message: str,
                 page: Optional[int] = None,
-                key: Optional[Tuple[int, int]] = None,
+                key: Optional[Tuple[int, ...]] = None,
                 state: str = FREE) -> None:
         rep = SvasanReport(detector, page, key, state, message)
         self.reports.append(rep)
@@ -229,13 +235,31 @@ class SVASanitizer:
         None): no TLB entry and no in-flight prefetch may survive for the
         dead keys."""
         self.checks += 1
+        dead_ranges: List[Tuple[int, ...]] = []
         if lps is None:
             dead_pending = [k for k in iommu._pending if k[0] == asid]
-            dead_tlb = [k for k in iommu.tlb.keys() if k[0] == asid]
+            dead_tlb = [k for k in iommu.tlb.keys()
+                        if k[0] == asid and len(k) == 2]
+            dead_ranges = [k for k in iommu.tlb.keys()
+                           if k[0] == asid and len(k) == 3]
         else:
-            keys = {(asid, lp) for lp in lps}
+            dead = set(lps)
+            keys = {(asid, lp) for lp in dead}
             dead_pending = [k for k in iommu._pending if k in keys]
             dead_tlb = [k for k in keys if k in iommu.tlb]
+            # Range entries don't key on a single logical page: a
+            # (asid, base, n) entry is stale as soon as it still *covers*
+            # any dead page — it would keep translating the unmapped page.
+            dead_ranges = [
+                k for k in iommu.tlb.keys()
+                if len(k) == 3 and k[0] == asid
+                and any(k[1] <= lp < k[1] + k[2] for lp in dead)]
+        if dead_ranges:
+            self._report(
+                "stale-range", f"{len(dead_ranges)} range entrie(s) still "
+                "cover unmapped logical pages — the range outlived a split "
+                "or invalidation and would translate a dead mapping",
+                key=dead_ranges[0], state=FREE)
         if dead_pending:
             self._report(
                 "stale-prefetch", f"{len(dead_pending)} in-flight prefetch "

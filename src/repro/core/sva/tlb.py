@@ -39,12 +39,25 @@ cache as a whole still has free entries is counted as a *conflict miss*
 (a fully-associative cache of the same capacity could have absorbed it);
 with one set that situation cannot arise, so ``conflict_misses`` is always
 0 for fully-associative configs.
+
+Range entries (``range_aware=True``, SPARTA-style coalescing): a 3-tuple
+key ``(asid, base_lpn, n_pages)`` is a *range entry* whose value is the
+base physical page — one entry translates ``n_pages`` contiguous logical
+pages to ``n_pages`` contiguous physical pages (``ppn = value + (lp -
+base_lpn)``). Range keys set-index on ``base_lpn`` (NOT the last tuple
+component — under an Sv39 walk cache 3-tuples are ``(asid, level,
+top-bits)`` keys, which is why range decoding is an explicit constructor
+opt-in rather than inferred from arity), weigh ``span=n_pages`` under
+gdsfs, and are tracked in a per-ASID side index so ``range_covering``
+resolves a logical page without scanning sets. The owning IOMMU is the
+only producer of range keys (coalescing on fill, splitting on partial
+invalidation — see iommu.py).
 """
 from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Hashable, Iterable, List, Optional, Tuple
+from typing import Dict, Hashable, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -84,7 +97,7 @@ class TranslationCache:
     associative."""
 
     def __init__(self, n_entries: int, policy: str = "lru", seed: int = 0,
-                 ways: int = 0):
+                 ways: int = 0, range_aware: bool = False):
         assert n_entries >= 1
         if policy not in POLICIES:
             raise ValueError(f"policy={policy!r} (expected one of {POLICIES})")
@@ -97,6 +110,11 @@ class TranslationCache:
         self.ways = ways
         self.n_sets = n_entries // ways
         self.policy = policy
+        self.range_aware = range_aware
+        # per-ASID side index of resident range entries: asid -> {base: n}.
+        # Disjoint by construction (the IOMMU never fills overlapping
+        # ranges), so range_covering has at most one answer.
+        self._range_index: Dict[int, Dict[int, int]] = {}
         self._sets: List[OrderedDict] = [OrderedDict()
                                          for _ in range(self.n_sets)]
         self._set0 = self._sets[0]      # fully-assoc fast path (hot loop)
@@ -111,14 +129,20 @@ class TranslationCache:
         self.stats = TLBStats()
 
     # ------------------------------------------------------------- indexing
+    def _is_range_key(self, key: Hashable) -> bool:
+        return self.range_aware and isinstance(key, tuple) and len(key) == 3
+
     def _set_index(self, key: Hashable) -> int:
         """Set selection on the logical page: the last integer component of
         a tuple key (the IOMMU keys ``(asid, logical_page)``), a bare int
-        key, or ``hash(key)`` for anything else."""
+        key, or ``hash(key)`` for anything else. Range keys
+        ``(asid, base_lpn, n_pages)`` index on ``base_lpn``."""
         if self.n_sets == 1:
             return 0
         page = key
-        if isinstance(page, tuple) and page:
+        if self._is_range_key(page):
+            page = page[1]
+        elif isinstance(page, tuple) and page:
             page = page[-1]
         if not isinstance(page, (int, np.integer)):
             page = hash(page)
@@ -174,8 +198,17 @@ class TranslationCache:
         del s[victim]
         self._freq.pop(victim, None)
         self._meta.pop(victim, None)
+        if self._is_range_key(victim):
+            self._drop_range(victim)
         self._n -= 1
         self.stats.evictions += 1
+
+    def _drop_range(self, key: Tuple[int, int, int]) -> None:
+        asid_ranges = self._range_index.get(key[0])
+        if asid_ranges is not None:
+            asid_ranges.pop(key[1], None)
+            if not asid_ranges:
+                del self._range_index[key[0]]
 
     def fill(self, key: Hashable, value, walked: bool = True,
              cost: Optional[float] = None, span: float = 1.0) -> None:
@@ -215,6 +248,8 @@ class TranslationCache:
             c = cost if cost is not None and cost > 0 else 1.0
             sp = span if span > 0 else 1.0
             self._meta[key] = [c, sp, self._clock[si] + c / sp]
+        if self._is_range_key(key):
+            self._range_index.setdefault(key[0], {})[key[1]] = key[2]
         self._n += 1
 
     def invalidate(self) -> None:
@@ -226,6 +261,7 @@ class TranslationCache:
         self._freq.clear()
         self._meta.clear()
         self._clock = [0.0] * self.n_sets
+        self._range_index.clear()
         self._n = 0
         self.stats.invalidations += 1
 
@@ -233,8 +269,46 @@ class TranslationCache:
         s = self._sets[self._set_index(key)]
         if s.pop(key, None) is not None:
             self._n -= 1
+            if self._is_range_key(key):
+                self._drop_range(key)
         self._freq.pop(key, None)
         self._meta.pop(key, None)
+
+    # ---------------------------------------------------------- range entries
+    def range_covering(self, asid: int,
+                       lp: int) -> Optional[Tuple[int, int]]:
+        """The resident range entry covering ``(asid, lp)`` as
+        ``(base_lpn, n_pages)``, or None. Resident ranges are disjoint, so
+        the lowest covering base (deterministic) is the only one."""
+        asid_ranges = self._range_index.get(asid)
+        if not asid_ranges:
+            return None
+        best: Optional[Tuple[int, int]] = None
+        for base, n in asid_ranges.items():
+            if base <= lp < base + n and (best is None or base < best[0]):
+                best = (base, n)
+        return best
+
+    def ranges_overlapping(self, asid: int, lo: int,
+                           hi: int) -> List[Tuple[int, int]]:
+        """Resident range entries of ``asid`` intersecting ``[lo, hi]``
+        (inclusive), ascending by base."""
+        asid_ranges = self._range_index.get(asid)
+        if not asid_ranges:
+            return []
+        return sorted((base, n) for base, n in asid_ranges.items()
+                      if base <= hi and base + n - 1 >= lo)
+
+    def peek(self, key: Hashable):
+        """Value for ``key`` with NO stats and NO replacement-state bump —
+        the IOMMU's split path reads a range's base this way."""
+        s = self._set0 if self.n_sets == 1 \
+            else self._sets[self._set_index(key)]
+        return s.get(key)
+
+    @property
+    def n_ranges(self) -> int:
+        return sum(len(r) for r in self._range_index.values())
 
     def keys(self) -> Iterable[Hashable]:
         out: List[Hashable] = []

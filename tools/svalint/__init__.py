@@ -83,7 +83,7 @@ def _terminal_name(node: ast.AST) -> str:
 
 #: private TranslationCache state (unique to tlb.py's implementation)
 _TLB_INTERNALS = {"_sets", "_set0", "_freq", "_meta", "_bump_gdsfs",
-                  "_set_index"}
+                  "_set_index", "_range_index"}
 
 #: the single module allowed to construct a TranslationCache (plus the
 #: defining module itself)
@@ -116,7 +116,7 @@ def _r001(path: str, tree: ast.Module) -> List[Finding]:
 # --------------------------------------------------------------------- R002
 
 _POOL_INTERNALS = {"_free", "_ref"}
-_POOL_MUTATORS = {"alloc", "free", "share"}
+_POOL_MUTATORS = {"alloc", "alloc_run", "free", "share"}
 _R002_ALLOWED = ("src/repro/core/sva/page_pool.py",
                  "src/repro/core/sva/kv_manager.py",
                  "src/repro/core/sva/mapping.py",
