@@ -241,6 +241,125 @@ def run_range_ab(dry_run: bool = False, tlb_ranges: int = 8) -> List[str]:
         f"run_fallbacks={s['pool_run_fallbacks']})"]
 
 
+# ------------------------------------------ multi-tenant serving A/B
+def _run_tenant_scenario(reqs, dep, pool_pages: int):
+    """Drive one continuous engine over a scenario trace (benchmarks/
+    scenarios.py), injecting each request at its arrival tick under its
+    tenant. ``dep=None`` is the untenanted control arm (same TLB
+    geometry, tenant labels dropped)."""
+    cfg, params = _cfg_params()
+    if dep is not None:
+        cfg = dep.compile(cfg)
+        tenants = dep.tenant_dict(pool_pages)
+    else:
+        cfg = dataclasses.replace(cfg, serve_tlb_entries=_TENANT_TLB_ENTRIES,
+                                  serve_tlb_ways=_TENANT_TLB_WAYS)
+        tenants = None
+    eng = ServingEngine(cfg, params, n_slots=4, max_len=64, page_size=8,
+                        scheduler="continuous", pool_pages=pool_pages,
+                        translation_stats=True, tenants=tenants)
+    finished = {}
+    rids = []
+    i, clock = 0, 0
+    while i < len(reqs) or eng.has_work:
+        while i < len(reqs) and reqs[i].arrival <= clock:
+            r = reqs[i]
+            rids.append(eng.submit(list(r.prompt), max_tokens=r.max_tokens,
+                                   tenant=r.tenant if tenants else None))
+            i += 1
+        if eng.has_work:
+            eng.step(finished)
+        clock += 1
+    outs = [finished[r].out_tokens for r in rids]
+    return outs, eng.stats()
+
+
+# Tiny serving IOTLB for the tenant A/B: 2 sets x 4 ways, so one bursty
+# tenant's working set cannot fit its private ways and the per-tenant
+# conflict_misses partition rows come out nonzero even at --dry-run size.
+_TENANT_TLB_ENTRIES = 8
+_TENANT_TLB_WAYS = 4
+_TENANT_POOL = 16
+
+
+def run_tenant_ab(dry_run: bool = False) -> List[str]:
+    """Multi-tenant serving A/B over one seeded scenario trace (see
+    benchmarks/scenarios.py): an untenanted control, tenants with a
+    SHARED IOTLB, and tenants with way-partitioned private ways — all
+    three must produce bit-identical outputs (tenancy changes isolation
+    and translation accounting, never tokens). Reports per-tenant
+    conflict-miss partition rows and the partitioned-vs-shared hit-rate
+    delta, plus the cross-tenant prefix-isolation check on an
+    adversarial collision trace."""
+    from benchmarks.scenarios import generate
+    from repro.configs.deployment import two_tenant_demo
+
+    n_req = 6 if dry_run else 10
+    cfg0 = reduce_for_smoke(get_config("llama3.2-1b"))
+    reqs = generate("bursty_tenants", ("a", "b"), cfg0.vocab_size,
+                    n_req=n_req, seed=5)
+    deps = {"untenanted": None,
+            "shared": dataclasses.replace(
+                two_tenant_demo(partitioned=False, ways=_TENANT_TLB_WAYS),
+                tlb_entries=_TENANT_TLB_ENTRIES),
+            "partitioned": dataclasses.replace(
+                two_tenant_demo(partitioned=True, ways=_TENANT_TLB_WAYS),
+                tlb_entries=_TENANT_TLB_ENTRIES)}
+    outs, stats = {}, {}
+    for arm, dep in deps.items():
+        outs[arm], stats[arm] = _run_tenant_scenario(reqs, dep,
+                                                     _TENANT_POOL)
+    identical = (outs["untenanted"] == outs["shared"]
+                 == outs["partitioned"])
+    rows = [f"paged_serving.tenant.bit_identical,{identical},"
+            "continuous serving outputs untenanted vs two-tenant shared "
+            "IOTLB vs way-partitioned — isolation and translation "
+            "accounting only, never tokens"]
+    part = stats["partitioned"]["tenant"]
+    shared = stats["shared"]["tenant"]
+    for t in sorted(part):
+        tb = part[t].get("tlb", {})
+        rows.append(
+            f"paged_serving.tenant.{t}.conflict_misses,"
+            f"{tb.get('conflict_misses', 0)},"
+            f"misses inside the tenant's {part[t]['ways']} private "
+            f"ways/set that a shared IOTLB of equal size would have "
+            f"absorbed (hits={tb.get('hits', 0)} "
+            f"misses={tb.get('misses', 0)} "
+            f"pages_used={part[t]['pages_used']} "
+            f"quota={part[t]['quota_pages']})")
+    for t in sorted(part):
+        hp = part[t].get("tlb", {}).get("hit_rate", 0.0)
+        hs = shared[t].get("tlb", {}).get("hit_rate", 0.0)
+        rows.append(
+            f"paged_serving.tenant.{t}.partition_hit_rate,{hp:.3f},"
+            f"IOTLB hit rate with private ways vs {hs:.3f} sharing all "
+            f"{_TENANT_TLB_WAYS} ways (partitioned-vs-shared A/B, equal "
+            f"{_TENANT_TLB_ENTRIES}-entry TLB, equal trace)")
+    sch = stats["partitioned"].get("sched", {})
+    rows.append(
+        f"paged_serving.tenant.preemptions,{sch.get('preemptions', 0)},"
+        f"scheduler preemptions under pool+quota pressure in the "
+        f"partitioned arm (pool={_TENANT_POOL} pages, quotas from "
+        f"pool shares; resumes={sch.get('resumes', 0)})")
+
+    # Adversarial cross-tenant prefix collisions: identical prompts from
+    # different tenants must NOT share pages once tenants are on.
+    col = generate("adversarial_prefix_collisions", ("a", "b"),
+                   cfg0.vocab_size, n_req=n_req, seed=7)
+    _, s_open = _run_tenant_scenario(col, None, _TENANT_POOL)
+    _, s_iso = _run_tenant_scenario(col, deps["shared"], _TENANT_POOL)
+    rows.append(
+        f"paged_serving.tenant.collision_pages_shared,"
+        f"{s_iso['prefix']['pages_shared']},"
+        f"prefix pages shared on the adversarial collision trace WITH "
+        f"tenant isolation (untenanted control shares "
+        f"{s_open['prefix']['pages_shared']}; the isolated count is "
+        f"within-tenant re-use only — cross-tenant hits are impossible "
+        f"by construction of the tenant-scoped index)")
+    return rows
+
+
 def run(dry_run: bool = False, tlb_ranges: int = 8) -> List[str]:
     n_req, max_tokens = (4, 4) if dry_run else (6, 8)
     rows = []
@@ -646,6 +765,15 @@ if __name__ == "__main__":
                "benchmarks/tlb_sweep.py.")
     ap.add_argument("--dry-run", action="store_true",
                     help="minimal sizes (CI smoke path)")
+    ap.add_argument("--tenants", action="store_true",
+                    help="run the multi-tenant serving A/B instead: "
+                         "untenanted vs two-tenant shared-IOTLB vs "
+                         "way-partitioned over one seeded scenario trace "
+                         "(benchmarks/scenarios.py) — bit-identity row, "
+                         "per-tenant conflict_misses partition rows, "
+                         "partitioned-vs-shared hit-rate A/B, and the "
+                         "cross-tenant prefix-collision isolation row "
+                         "(configs/deployment.py describes the tenants)")
     ap.add_argument("--translation-report", action="store_true",
                     help="replay the serving translation trace through "
                          "Sv39Walk(llc on/off): per-decode-step PTW %%, "
@@ -678,7 +806,9 @@ if __name__ == "__main__":
                          "(ModelConfig.serve_tlb_ranges on the A/B engine; "
                          "0 disables the range rows)")
     args = ap.parse_args()
-    if args.translation_report:
+    if args.tenants:
+        print("\n".join(run_tenant_ab(dry_run=args.dry_run)))
+    elif args.translation_report:
         print("\n".join(run_translation_report(
             dry_run=args.dry_run, dram_latency=args.dram_latency,
             prefetch_policy=args.prefetch,

@@ -1,0 +1,161 @@
+"""Multi-tenant serving scenario generator.
+
+Seeded, deterministic request traces for the multi-tenant benchmarks
+(``paged_serving --tenants``, ``tlb_sweep``) and the conformance tests —
+far more diverse than the two stock deployment profiles, but every trace
+is a pure function of ``(kind, tenants, vocab, n_req, seed)`` so A/B arms
+replay the exact same workload and goldens pin the generator.
+
+Three scenario kinds:
+
+  bursty_tenants      each tenant arrives with its own burst character —
+                      the first tenant in bursts (Poisson gaps ~0.5, many
+                      same-tick arrivals), later tenants steadily — the
+                      noisy-neighbor regime IOTLB way partitioning and
+                      page quotas exist for.
+  conversation_trees  per-tenant conversation trees: a system prompt
+                      root, follow-ups extending a random earlier node —
+                      deep WITHIN-tenant prefix sharing (the tenant-scoped
+                      prefix index's win case).
+  adversarial_prefix_collisions
+                      byte-identical prompts submitted under DIFFERENT
+                      tenants (plus shared-prefix/different-tail near
+                      misses): isolation must keep these from sharing
+                      pages even though the token streams collide.
+
+Use :func:`generate` with a kind from :data:`SCENARIO_KINDS`;
+:func:`trace_fingerprint` gives a stable digest for seed-determinism
+goldens (tests/test_multitenant.py).
+"""
+from __future__ import annotations
+
+import hashlib
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+__all__ = ["ScenarioRequest", "SCENARIO_KINDS", "generate",
+           "bursty_tenants", "conversation_trees",
+           "adversarial_prefix_collisions", "trace_fingerprint"]
+
+
+@dataclass(frozen=True)
+class ScenarioRequest:
+    """One generated request: which tenant submits what, when (arrival is
+    an engine-step tick — the driver injects between steps)."""
+    tenant: str
+    prompt: Tuple[int, ...]
+    max_tokens: int
+    arrival: int
+
+
+def _merge(streams: List[List[ScenarioRequest]]) -> List[ScenarioRequest]:
+    """Interleave per-tenant streams by arrival tick; ties resolve in
+    tenant-stream order (deterministic)."""
+    out = [r for s in streams for r in s]
+    out.sort(key=lambda r: r.arrival)        # stable: preserves tie order
+    return out
+
+
+def bursty_tenants(tenants: Sequence[str], vocab: int, n_req: int,
+                   seed: int) -> List[ScenarioRequest]:
+    rng = np.random.default_rng(seed)
+    per = -(-n_req // max(len(tenants), 1))
+    streams = []
+    for ti, t in enumerate(tenants):
+        n = min(per, n_req - ti * per)
+        if n <= 0:
+            break
+        # first tenant bursts (tight gaps), later ones are steady
+        lam = 0.5 if ti == 0 else 2.0
+        gaps = rng.poisson(lam, size=n)
+        gaps[0] = 0
+        arrivals = np.cumsum(gaps)
+        lens = rng.integers(5, 28, size=n)
+        maxtoks = rng.integers(4, 12, size=n)
+        streams.append([
+            ScenarioRequest(t, tuple(rng.integers(0, vocab,
+                                                  size=int(lens[i])).tolist()),
+                            int(maxtoks[i]), int(arrivals[i]))
+            for i in range(n)])
+    return _merge(streams)
+
+
+def conversation_trees(tenants: Sequence[str], vocab: int, n_req: int,
+                       seed: int) -> List[ScenarioRequest]:
+    rng = np.random.default_rng(seed)
+    per = -(-n_req // max(len(tenants), 1))
+    streams = []
+    for ti, t in enumerate(tenants):
+        n = min(per, n_req - ti * per)
+        if n <= 0:
+            break
+        system = tuple(rng.integers(0, vocab, size=16).tolist())
+        nodes: List[Tuple[int, ...]] = [system]
+        reqs, clock = [], 0
+        for _ in range(n):
+            parent = nodes[int(rng.integers(0, len(nodes)))]
+            turn = tuple(rng.integers(0, vocab,
+                                      size=int(rng.integers(3, 9))).tolist())
+            prompt = parent + turn
+            nodes.append(prompt)
+            clock += int(rng.poisson(1.5))
+            reqs.append(ScenarioRequest(t, prompt,
+                                        int(rng.integers(4, 10)), clock))
+        streams.append(reqs)
+    return _merge(streams)
+
+
+def adversarial_prefix_collisions(tenants: Sequence[str], vocab: int,
+                                  n_req: int,
+                                  seed: int) -> List[ScenarioRequest]:
+    rng = np.random.default_rng(seed)
+    # one popular prompt every tenant submits verbatim, plus near misses
+    # sharing its prefix with a divergent tail
+    popular = tuple(rng.integers(0, vocab, size=21).tolist())
+    reqs, clock = [], 0
+    for i in range(n_req):
+        t = tenants[i % len(tenants)]
+        if i % 3 == 2:
+            prompt = popular[:16] + tuple(
+                rng.integers(0, vocab, size=int(rng.integers(3, 7))).tolist())
+        else:
+            prompt = popular
+        clock += int(rng.poisson(1.0))
+        reqs.append(ScenarioRequest(t, prompt, int(rng.integers(4, 10)),
+                                    clock))
+    return reqs
+
+
+SCENARIO_KINDS = ("bursty_tenants", "conversation_trees",
+                  "adversarial_prefix_collisions")
+_GENERATORS = {"bursty_tenants": bursty_tenants,
+               "conversation_trees": conversation_trees,
+               "adversarial_prefix_collisions":
+               adversarial_prefix_collisions}
+
+
+def generate(kind: str, tenants: Sequence[str], vocab: int,
+             n_req: int = 12, seed: int = 0) -> List[ScenarioRequest]:
+    """Generate one deterministic trace. Same arguments -> byte-identical
+    trace, always (pinned by trace_fingerprint goldens)."""
+    if kind not in _GENERATORS:
+        raise ValueError(f"unknown scenario kind {kind!r} "
+                         f"(known: {list(SCENARIO_KINDS)})")
+    if not tenants:
+        raise ValueError("scenario generation needs at least one tenant")
+    return _GENERATORS[kind](list(tenants), vocab, n_req, seed)
+
+
+def trace_fingerprint(reqs: Sequence[ScenarioRequest]) -> str:
+    """Stable short digest of a trace (seed-determinism goldens)."""
+    h = hashlib.sha256()
+    for r in reqs:
+        h.update(repr((r.tenant, r.prompt, r.max_tokens,
+                       r.arrival)).encode())
+    return h.hexdigest()[:16]

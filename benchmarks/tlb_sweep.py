@@ -261,6 +261,66 @@ def adaptive_rows(trace, best_geom: Geometry, consts: dict,
     return out
 
 
+# ------------------------------------------------- multi-tenant replay A/B
+_TENANTS = ("a", "b")
+
+
+def _tenant_of_slot(slot: int) -> str:
+    """Round-robin slot -> tenant assignment for replaying an untenanted
+    recorded trace under tenant identities (the trace carries no tenant
+    labels; any deterministic assignment gives the partitioning A/B a
+    well-defined workload split)."""
+    return _TENANTS[slot % len(_TENANTS)]
+
+
+def tenant_ab_rows(traces: Dict[str, list], consts: dict,
+                   dram_latency: int) -> List[str]:
+    """Replay each recorded deployment trace under two-tenant identities
+    on a small partitionable IOTLB: all ways shared vs private ways per
+    tenant (``TLBConfig.partitions``). Both arms see the exact same
+    demand stream — partitioning moves misses between tenants, never
+    changes the trace — so the rows isolate the interference/isolation
+    trade: a noisy neighbor can thrash the shared arm's whole TLB but
+    only its own ways in the partitioned arm."""
+    soc = PaperSoCConfig()
+    entries, ways = 8, 4
+    rows: List[str] = []
+    for dep, trace in traces.items():
+        arms = {}
+        for label, parts in (("shared", {}),
+                             ("partitioned", {"a": 2, "b": 1})):
+            walker = Sv39Walk(
+                levels=soc.ptw_levels,
+                dram_access_cycles=dram_latency + soc.dram_base_latency,
+                llc=False, to_accel=H2A)
+            iommu = IOMMU(walk_model=walker,
+                          tlb=TLBConfig(entries, "lru", ways=ways,
+                                        partitions=parts))
+            for t in _TENANTS:
+                iommu.register_tenant(t)
+            per_step = replay_trace(trace, iommu,
+                                    consts["kv_bytes_per_token"],
+                                    consts["compute_per_token"], soc,
+                                    dram_latency,
+                                    tenant_of=_tenant_of_slot)
+            arms[label] = (iommu, sum(p for p, _ in per_step))
+        for label in ("shared", "partitioned"):
+            iommu, demand = arms[label]
+            ts = iommu.stats().get("tenant", {})
+            per_t = " ".join(
+                f"{t}:hits={ts[t].get('tlb', {}).get('hits', 0)}"
+                f"/misses={ts[t].get('tlb', {}).get('misses', 0)}"
+                f"/conflict={ts[t].get('tlb', {}).get('conflict_misses', 0)}"
+                for t in sorted(ts))
+            cfgstr = ("all ways shared" if label == "shared"
+                      else "ways a=2 b=1 (+1 shared)")
+            rows.append(
+                f"tlb_sweep.tenant.{dep}.{label},{demand:.1f},"
+                f"demand PTW cycles @ e{entries}.w{ways} {cfgstr}; "
+                f"{per_t}")
+    return rows
+
+
 def run(smoke: bool = False, out: str = "tlb_sweep.csv",
         dram_latency: int = 200, ranges: int = 8) -> List[str]:
     traces, consts = record_traces(dry_run=smoke)
@@ -386,6 +446,9 @@ def run(smoke: bool = False, out: str = "tlb_sweep.csv",
             f"range_entries={rr['range_entries']} "
             f"coalesced_pages={rr['coalesced_pages']} "
             f"splits={rr['range_splits']})")
+    # --------- multi-tenant partitioned-vs-shared A/B (same traces,
+    # round-robin slot->tenant identities; see benchmarks/README.md)
+    rows += tenant_ab_rows(traces, consts, dram_latency)
     return rows
 
 

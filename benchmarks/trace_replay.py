@@ -58,7 +58,7 @@ recorded trace.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from repro.configs.paper_soc import PaperSoCConfig
 from repro.core.simulator.platform import H2A
@@ -141,14 +141,15 @@ def _validate_event(i: int, ev) -> str:
     return kind
 
 
-def _install_row(iommu: IOMMU, slot: int, row) -> None:
+def _install_row(iommu: IOMMU, slot: int, row,
+                 tenant: Optional[str] = None) -> None:
     """Install a slot's logical->physical table into the replay IOMMU
     (attaching the space on first sight). The TLB is NOT warmed — the
     recorded demand stream decides what gets cached; only the prefetcher
     (and, via :func:`_warm_ranges`, the range coalescer) reads the table."""
     sp = iommu.space(slot)
     if sp is None:
-        sp = iommu.attach(slot)
+        sp = iommu.attach(slot, tenant=tenant)
     sp.table.clear()
     for lp, pp in enumerate(row):
         sp.table[lp] = pp
@@ -203,14 +204,22 @@ def trace_fragmentation(trace) -> dict:
 def replay_trace(trace, iommu: IOMMU, kv_bytes_per_token: int,
                  compute_per_token: float, soc: PaperSoCConfig,
                  dram_latency: int,
-                 tuner: Optional[TLBAutoTuner] = None
+                 tuner: Optional[TLBAutoTuner] = None,
+                 tenant_of: Optional[Callable[[int], Optional[str]]] = None
                  ) -> List[Tuple[float, float]]:
     """Feed a recorded serving translation trace through ``iommu``.
     Returns the per-decode-step list of (ptw_cycles, step_cycles) in
     accelerator cycles. ``ptw_cycles`` is the DEMAND-exposed translation
     cost: walk cost on misses plus the exposed latency of late prefetches
     (prefetch walks that completed in time cost the demand path nothing —
-    their cycles only show in the walk model's totals)."""
+    their cycles only show in the walk model's totals).
+
+    ``tenant_of`` (slot -> tenant name, for a replay IOMMU with
+    registered TenantDomains) replays every attach and translation under
+    the slot's tenant identity — the multi-tenant A/B path
+    (``tlb_sweep``): way partitions and per-tenant stats see the same
+    traffic the live engine would issue. None (the default) replays
+    untenanted, bit-identical to the historical replay."""
     burst = (dram_latency + soc.dram_base_latency) * H2A
     per_step: List[Tuple[float, float]] = []
     for i, ev in enumerate(trace):
@@ -218,7 +227,8 @@ def replay_trace(trace, iommu: IOMMU, kv_bytes_per_token: int,
         if kind == "map":
             iommu.host_map_pass(ev[1])
             if len(ev) >= 4:
-                _install_row(iommu, ev[2], ev[3])
+                _install_row(iommu, ev[2], ev[3],
+                             tenant=tenant_of(ev[2]) if tenant_of else None)
                 _warm_ranges(iommu, ev[2], ev[1], ev[3])
         elif kind == "unmap":
             _, slot, n_pages = ev
@@ -251,7 +261,9 @@ def replay_trace(trace, iommu: IOMMU, kv_bytes_per_token: int,
                         from None
                 # translate() re-walks stale hits itself (the recorded phys
                 # is ground truth after a CoW remap)
-                _, cost, _ = iommu.translate(slot, lp, phys=phys)
+                _, cost, _ = iommu.translate(
+                    slot, lp, phys=phys,
+                    tenant=tenant_of(slot) if tenant_of else None)
                 ptw += cost
             kv_bytes = tokens * kv_bytes_per_token
             dma = len(accesses) * burst \

@@ -88,7 +88,8 @@ class DisaggEngine(ServingEngine):
         self._apply_cow()
         while self.queue:
             req = self.queue.popleft()
-            self.sched.submit(req.req_id, req.prompt, req.max_tokens)
+            self.sched.submit(req.req_id, req.prompt, req.max_tokens,
+                              tenant=req.tenant)
             self._waiting_reqs[req.req_id] = req
         t0 = time.perf_counter()
         out = self.sched.schedule()

@@ -79,6 +79,7 @@ class Request:
     req_id: int
     prompt: List[int]
     max_tokens: int
+    tenant: Optional[str] = None   # owning TenantDomain (None = untenanted)
     out_tokens: List[int] = field(default_factory=list)
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
@@ -246,7 +247,8 @@ class ServingEngine:
                  record_translation_trace: bool = False,
                  translation_stats: bool = False,
                  scheduler: str = "fixed",
-                 pool_pages: Optional[int] = None):
+                 pool_pages: Optional[int] = None,
+                 tenants: Optional[Dict[str, dict]] = None):
         if scheduler not in ("fixed", "continuous"):
             raise ValueError(f"scheduler={scheduler!r} "
                              "(expected 'fixed' or 'continuous')")
@@ -303,7 +305,10 @@ class ServingEngine:
                                   tlb_prefetch=prefetch,
                                   autotune=autotune,
                                   prefix_autotune=cfg.prefix_cache_autotune,
-                                  pool_pages=pool_pages)
+                                  pool_pages=pool_pages,
+                                  # multi-tenant domains: per-tenant ASID
+                                  # ownership, quotas, IOTLB way partitions
+                                  tenants=tenants)
         # Translation trace: ("map", fresh_pages) at admission (Listing-1
         # host map pass) and ("step", accesses, tokens_read) per decode step
         # — replayable through any IOMMU walk model (see
@@ -409,13 +414,18 @@ class ServingEngine:
                                    on_event=self._trace_event)
 
     # --------------------------------------------------------------- API
-    def submit(self, prompt: List[int], max_tokens: int = 16) -> int:
-        self.mgr.ensure_fits(len(prompt), max_tokens)   # reject, never wrap
+    def submit(self, prompt: List[int], max_tokens: int = 16,
+               tenant: Optional[str] = None) -> int:
+        self.mgr._check_tenant_name(tenant)     # unknown tenant: fail here,
+                                                # not steps later at admit
+        # reject, never wrap (and never over a tenant's whole quota)
+        self.mgr.ensure_fits(len(prompt), max_tokens, tenant=tenant)
         if self.sched is not None and not prompt:
             raise ValueError("continuous scheduling needs a non-empty prompt")
         rid = self._next_id
         self._next_id += 1
         self.queue.append(Request(rid, list(prompt), max_tokens,
+                                  tenant=tenant,
                                   submitted_at=time.perf_counter(),
                                   submitted_step=self._step_count))
         return rid
@@ -485,7 +495,8 @@ class ServingEngine:
             req = self.queue[0]
             t0 = time.perf_counter()
             st = self.mgr.admit(req.req_id, len(req.prompt), req.max_tokens,
-                                tokens=req.prompt if self._can_share else None)
+                                tokens=req.prompt if self._can_share else None,
+                                tenant=req.tenant)
             self.metrics["admit_s"] += time.perf_counter() - t0
             if st is None:
                 break                      # no slot/pages: continuous batching waits
@@ -782,7 +793,8 @@ class ServingEngine:
         self._apply_cow()
         while self.queue:
             req = self.queue.popleft()
-            self.sched.submit(req.req_id, req.prompt, req.max_tokens)
+            self.sched.submit(req.req_id, req.prompt, req.max_tokens,
+                              tenant=req.tenant)
             self._waiting_reqs[req.req_id] = req
         t0 = time.perf_counter()
         out = self.sched.schedule()

@@ -78,6 +78,7 @@ class WaitingSeq:
     max_tokens: int               # remaining generation budget (rebased)
     pending: Optional[int] = None  # decode token to re-inject on resume
     preempted: bool = False
+    tenant: Optional[str] = None   # owning TenantDomain (None = untenanted)
 
 
 @dataclass
@@ -138,11 +139,15 @@ class Scheduler:
         self.resumes = 0
 
     # ----------------------------------------------------------------- API
-    def submit(self, seq_id: int, prompt: List[int], max_tokens: int) -> None:
+    def submit(self, seq_id: int, prompt: List[int], max_tokens: int,
+               tenant: Optional[str] = None) -> None:
         if not prompt:
             raise ValueError("continuous scheduling needs a non-empty prompt")
-        self.mgr.ensure_fits(len(prompt), max_tokens)   # reject, never wrap
-        self.waiting.append(WaitingSeq(seq_id, list(prompt), max_tokens))
+        # reject-never-wrap; with a tenant this also rejects requests that
+        # can never fit the tenant's page quota
+        self.mgr.ensure_fits(len(prompt), max_tokens, tenant=tenant)
+        self.waiting.append(WaitingSeq(seq_id, list(prompt), max_tokens,
+                                       tenant=tenant))
 
     def finish(self, seq_id: int) -> None:
         """A sequence completed (the engine releases it): drop scheduler +
@@ -175,12 +180,37 @@ class Scheduler:
                and self.mgr.next_step_page_demand()
                > self.mgr.free_page_headroom()):
             out.preempted.append(self._preempt_one())
+        # 1b. Quota pressure (multi-tenant only): decode appends are never
+        #     blocked on a quota — a mid-step allocation can't wait — so a
+        #     tenant can drift over its page quota through decode growth
+        #     and CoW. Shed the over-quota tenant's NEWEST sequences until
+        #     it is back under, always sparing its oldest running sequence
+        #     (whose completions are what drain the debt; preempting the
+        #     last one would just thrash preempt/resume).
+        if self.mgr.tenant_specs:
+            for t in self.mgr.tenants_over_quota():
+                mine = [sid for sid in self.running
+                        if self.mgr.seqs[sid].tenant == t]
+                for sid in reversed(mine[1:]):
+                    if (len(self.running) <= self.min_running
+                            or self.mgr.tenant_pages_used(t)
+                            <= self.mgr.tenant_quota(t)):
+                        break
+                    out.preempted.append(self._preempt_sid(sid))
         # 2. Resume/admit from the waiting queue (preempted sequences sit at
         #    the front). Don't admit into the headroom the running
         #    sequences' growth needs — that admission would be preempted
-        #    right back next step.
+        #    right back next step. With tenants, quota-blocked entries are
+        #    skipped (not head-of-line blocking the other tenants) — FIFO
+        #    order is preserved among the eligible.
         while self.waiting:
-            ws = self.waiting[0]
+            idx = 0
+            if self.mgr.tenant_specs:
+                idx = next((i for i, w in enumerate(self.waiting)
+                            if not self._quota_blocked(w)), -1)
+                if idx < 0:
+                    break       # everyone waiting is over quota: wait
+            ws = self.waiting[idx]
             need = -(-len(ws.tokens) // self.mgr.page_size)
             if len(ws.tokens) % self.mgr.page_size == 0:
                 # The final chunk's first-token append lands one past the
@@ -196,15 +226,16 @@ class Scheduler:
             if ws.preempted:
                 st = self.mgr.resume(
                     ws.seq_id, len(ws.tokens), ws.max_tokens,
-                    tokens=ws.tokens if self.share_tokens else None)
+                    tokens=ws.tokens if self.share_tokens else None,
+                    tenant=ws.tenant)
             else:
                 st = self.mgr.admit(
                     ws.seq_id, len(ws.tokens), ws.max_tokens,
                     tokens=ws.tokens if self.share_tokens else None,
-                    lazy=True)
+                    lazy=True, tenant=ws.tenant)
             if st is None:
                 break                       # no slot/pages: keep waiting
-            self.waiting.popleft()
+            del self.waiting[idx]           # idx==0 unless quota-skipping
             self.buffer.attach(st.slot, ws.seq_id, ws.tokens,
                                st.prefill_start)
             self.running.append(ws.seq_id)
@@ -257,12 +288,27 @@ class Scheduler:
         migrate them to the decode worker."""
         return self.buffer.is_decoding(slot)
 
+    def _quota_blocked(self, ws: WaitingSeq) -> bool:
+        """Would admitting ``ws`` right now push its tenant over quota?
+        Mirrors ``admit``'s transient quota gate for the lazy page need, so
+        the waiting-queue scan skips entries that would just bounce."""
+        quota = self.mgr.tenant_quota(ws.tenant)
+        if not quota:
+            return False
+        need = max(-(-len(ws.tokens) // self.mgr.page_size), 1)
+        return self.mgr.tenant_pages_used(ws.tenant) + need > quota
+
     # ------------------------------------------------------------ preempt
     def _preempt_one(self) -> Tuple[int, List[int]]:
         """Preempt the newest-admitted running sequence: register its
         computed KV for re-match, tear down its slot/pages/ASID, and queue
         it (front) for resume. Returns (seq_id, folded generated tokens)."""
-        sid = self.running.pop()
+        return self._preempt_sid(self.running[-1])
+
+    def _preempt_sid(self, sid: int) -> Tuple[int, List[int]]:
+        """Preempt a specific running sequence (quota preemption picks by
+        tenant, not strictly newest-overall)."""
+        self.running.remove(sid)
         slot = self.buffer.slot_of(sid)
         st = self.mgr.seqs[sid]
         pending = self._pending_tok.pop(sid, None)

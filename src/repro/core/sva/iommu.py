@@ -63,6 +63,21 @@ Adaptive front-end (this is where the design space stops being static):
     epoch (the next serving table upload must be full); cumulative stats
     carry across so the ``tlb:`` schema stays monotonic.
 
+Multi-tenant domains (the MMU-partitioning / execution-domain axis —
+"Address Translation Design Tradeoffs for Heterogeneous Systems" +
+bus-firewall execution domains): a :class:`TenantDomain` groups ASIDs
+under one named tenant. Ownership is established at :meth:`IOMMU.attach`
+(``attach(asid, tenant=...)``) and enforced on EVERY translation — a
+translate on behalf of one tenant for an ASID another tenant owns raises
+a structured :class:`IsolationError` before any TLB state is touched, so
+range entries and prefetch fills can never leak across the boundary
+(they are keyed by ASID, and the ASID's owner is checked first).
+``TLBConfig(partitions={tenant: ways})`` additionally way-partitions the
+IOTLB so one tenant's thrash cannot evict another's entries; per-tenant
+``tlb:`` stats (including a tenant-local ``conflict_misses``) land in the
+``tenant:`` stats block, which — like ``range:`` — only appears once a
+tenant is registered.
+
 Stats schema (``IOMMU.stats()``; see ARCHITECTURE.md): ``tlb:``
 (``TLBStats.as_dict``), ``walk:`` (model name, walks, cycles, plus
 ``walk_cache:`` and ``prefetch:`` blocks when configured), ``epoch``,
@@ -94,7 +109,13 @@ class TLBConfig:
     associative — one set, bit-identical to the historical behavior; any
     proper divisor of ``n_entries`` splits the cache into
     ``n_entries // ways`` sets indexed on the logical page, with per-set
-    replacement state and conflict-miss accounting."""
+    replacement state and conflict-miss accounting.
+
+    ``partitions`` way-partitions the cache between tenants: a mapping
+    (or tuple of pairs — normalized, so configs stay hashable for the
+    auto-tuner's equality checks) ``tenant -> private ways per set``.
+    Leftover ways form the shared pool for un-partitioned traffic; the
+    empty default is bit-identical to the unpartitioned cache."""
     n_entries: int = 4096
     policy: str = "lru"           # lru | fifo | lfu | random
     seed: int = 0                 # random-policy determinism (trace parity)
@@ -102,6 +123,7 @@ class TLBConfig:
     ranges: int = 0               # max pages one range entry may coalesce
                                   # (0 = per-page entries only; >= 2 arms
                                   # SPARTA-style range coalescing)
+    partitions: Tuple[Tuple[str, int], ...] = ()  # tenant -> ways per set
 
     def __post_init__(self):
         if self.n_entries < 1:
@@ -118,6 +140,26 @@ class TLBConfig:
             raise ValueError(
                 f"ranges={self.ranges} (0 = off, else the max coalesced "
                 "run length, >= 2)")
+        if isinstance(self.partitions, dict):
+            object.__setattr__(self, "partitions",
+                               tuple(sorted(self.partitions.items())))
+        else:
+            object.__setattr__(self, "partitions",
+                               tuple(tuple(p) for p in self.partitions))
+        names = [t for t, _ in self.partitions]
+        if len(names) != len(set(names)):
+            raise ValueError(f"duplicate tenant in partitions={names}")
+        for t, w in self.partitions:
+            if not isinstance(t, str) or not t:
+                raise ValueError(f"partition tenant {t!r} must be a "
+                                 "non-empty string")
+            if w < 1:
+                raise ValueError(f"partition {t!r}: ways={w} (need >= 1)")
+        reserved = sum(w for _, w in self.partitions)
+        if reserved > ways:
+            raise ValueError(
+                f"partitions reserve {reserved} ways but the TLB has "
+                f"{ways} per set")
 
     @property
     def resolved_ways(self) -> int:
@@ -126,6 +168,10 @@ class TLBConfig:
     @property
     def n_sets(self) -> int:
         return self.n_entries // self.resolved_ways
+
+    @property
+    def partition_dict(self) -> Dict[str, int]:
+        return dict(self.partitions)
 
 
 @dataclass(frozen=True)
@@ -500,6 +546,61 @@ class IOAddressSpace:
         return len(self.table)
 
 
+class IsolationError(PermissionError):
+    """A tenant tried to translate through an ASID another tenant owns —
+    the hard multi-tenant boundary. Structured like
+    :class:`~repro.core.sva.sanitizer.SvasanReport`: the fields are what
+    the isolation tests assert on."""
+
+    def __init__(self, tenant: Optional[str], owner: str, asid: int,
+                 page: Optional[int] = None):
+        self.tenant = tenant      # who asked (None = untenanted caller)
+        self.owner = owner        # who owns the ASID
+        self.asid = asid
+        self.page = page          # logical page, when a translate faulted
+        where = f" page {page}" if page is not None else ""
+        super().__init__(
+            f"tenant {tenant!r} denied: asid {asid}{where} is owned by "
+            f"tenant {owner!r}")
+
+
+class TenantDomain:
+    """One tenant's view of the IOMMU: the set of ASIDs it owns and the
+    translation verbs scoped to them (the execution-domain / bus-firewall
+    analogue). Obtained via :meth:`IOMMU.register_tenant`; every translate
+    issued through a domain carries the tenant identity, and the IOMMU
+    refuses (structured :class:`IsolationError`) before touching any TLB
+    state when the ASID belongs to someone else."""
+
+    def __init__(self, iommu: "IOMMU", name: str):
+        self.iommu = iommu
+        self.name = name
+        self.asids: set = set()
+        self.denials = 0          # isolation faults charged to this tenant
+
+    def attach(self, asid: int) -> IOAddressSpace:
+        """Attach a fresh address space owned by this tenant."""
+        return self.iommu.attach(asid, tenant=self.name)
+
+    def adopt(self, asid: int) -> None:
+        """Take ownership of an ASID without (re)attaching a space — trace
+        replay assigns recorded slots to tenants this way."""
+        owner = self.iommu._asid_tenant.get(asid)
+        if owner is not None and owner != self.name:
+            self.denials += 1
+            raise IsolationError(self.name, owner, asid)
+        self.iommu._asid_tenant[asid] = self.name
+        self.asids.add(asid)
+
+    def translate(self, asid: int, page: int,
+                  phys: Optional[int] = None) -> Tuple[int, float, bool]:
+        """Translate on behalf of this tenant (isolation-checked)."""
+        return self.iommu.translate(asid, page, phys, tenant=self.name)
+
+    def stats(self) -> dict:
+        return dict(asids=len(self.asids), denials=self.denials)
+
+
 class IOMMU:
     """The translation front-end: one shared IOTLB + one walk cost model,
     many attached address spaces (ASIDs), and an optional IOTLB prefetcher
@@ -510,9 +611,13 @@ class IOMMU:
                  prefetch: PrefetchConfig = PrefetchConfig()):
         self.walk_model: WalkModel = walk_model or CountingWalk()
         self.tlb_config = tlb
-        self.tlb = TranslationCache(tlb.n_entries, policy=tlb.policy,
-                                    seed=tlb.seed, ways=tlb.ways,
-                                    range_aware=bool(tlb.ranges))
+        # Tenant registry: name -> TenantDomain, asid -> owning tenant.
+        # Empty (the default) keeps every path bit-identical to the
+        # untenanted front-end — translate()'s check is one truthiness
+        # test, and the cache gets no tenant resolver.
+        self._tenants: Dict[str, TenantDomain] = {}
+        self._asid_tenant: Dict[int, str] = {}
+        self.tlb = self._build_cache(tlb)
         self.prefetch_config = prefetch
         # Range-coalescing counters (the ``range:`` stats block; only
         # reported when ``tlb.ranges`` arms coalescing).
@@ -538,13 +643,72 @@ class IOMMU:
         # translate()/unmap paths bit-identical to the unsanitized stack.
         self.sanitizer: Optional["SVASanitizer"] = None
 
+    # ------------------------------------------------------------- tenants
+    def _build_cache(self, tlb: TLBConfig) -> TranslationCache:
+        """The ONE TranslationCache constructor for the IOTLB: geometry
+        from ``tlb``, tenant resolver wired iff tenancy is in play."""
+        parts = tlb.partition_dict
+        tenant_of = self._tenant_of_key if (parts or self._tenants) else None
+        return TranslationCache(tlb.n_entries, policy=tlb.policy,
+                                seed=tlb.seed, ways=tlb.ways,
+                                range_aware=bool(tlb.ranges),
+                                partitions=parts or None,
+                                tenant_of=tenant_of)
+
+    def _tenant_of_key(self, key) -> Optional[str]:
+        """Tenant owning a TLB key — both exact ``(asid, lp)`` and range
+        ``(asid, base, n)`` keys carry the ASID first."""
+        if isinstance(key, tuple) and key:
+            return self._asid_tenant.get(key[0])
+        return None
+
+    def register_tenant(self, name: str) -> TenantDomain:
+        """Create (or return) the named tenant domain. The first
+        registration arms per-tenant TLB accounting."""
+        if not name:
+            raise ValueError("tenant name must be non-empty")
+        dom = self._tenants.get(name)
+        if dom is None:
+            dom = self._tenants[name] = TenantDomain(self, name)
+            if self.tlb._tenant_of is None:
+                self.tlb._tenant_of = self._tenant_of_key
+        return dom
+
+    def tenant_of(self, asid: int) -> Optional[str]:
+        """The tenant owning ``asid`` (None = unowned)."""
+        return self._asid_tenant.get(asid)
+
+    def _check_tenant(self, tenant: Optional[str], asid: int,
+                      page: Optional[int] = None) -> None:
+        """The isolation gate: an owned ASID may only be used by its
+        owner. Untenanted callers (tenant=None) are refused too — once an
+        ASID belongs to a domain, anonymous access is a leak."""
+        owner = self._asid_tenant.get(asid)
+        if owner is not None and owner != tenant:
+            dom = self._tenants.get(tenant) if tenant else None
+            if dom is not None:
+                dom.denials += 1
+            raise IsolationError(tenant, owner, asid, page)
+
     # ----------------------------------------------------------- lifecycle
-    def attach(self, asid: int) -> IOAddressSpace:
-        """Create the per-process/per-request address space for ``asid``."""
+    def attach(self, asid: int,
+               tenant: Optional[str] = None) -> IOAddressSpace:
+        """Create the per-process/per-request address space for ``asid``.
+        ``tenant`` assigns ownership to a registered domain (the slot's
+        translations are then isolation-checked against it)."""
         if asid in self._spaces:
             raise ValueError(f"asid {asid} already attached")
+        if tenant is not None and tenant not in self._tenants:
+            raise ValueError(f"tenant {tenant!r} is not registered")
+        if self._asid_tenant:
+            # re-attaching an ASID a live tenant still owns needs the
+            # owner's identity (or a prior detach dropped it)
+            self._check_tenant(tenant, asid)
         sp = IOAddressSpace(self, asid)
         self._spaces[asid] = sp
+        if tenant is not None:
+            self._asid_tenant[asid] = tenant
+            self._tenants[tenant].asids.add(asid)
         return sp
 
     def detach(self, asid: int) -> None:
@@ -568,6 +732,11 @@ class IOMMU:
             # nothing of the dead space may survive detach: no TLB entry,
             # no in-flight prefetch fill
             self.sanitizer.check_unmapped(self, asid)
+        owner = self._asid_tenant.pop(asid, None)
+        if owner is not None:
+            dom = self._tenants.get(owner)
+            if dom is not None:
+                dom.asids.discard(asid)
         sp.table.clear()
 
     def space(self, asid: int) -> Optional[IOAddressSpace]:
@@ -691,8 +860,17 @@ class IOMMU:
 
     # --------------------------------------------------------- translation
     def translate(self, asid: int, page: int,
-                  phys: Optional[int] = None) -> Tuple[int, float, bool]:
+                  phys: Optional[int] = None,
+                  tenant: Optional[str] = None) -> Tuple[int, float, bool]:
         """IOTLB lookup; walks the page table on miss.
+
+        ``tenant`` is the identity the translation is issued under
+        (:meth:`TenantDomain.translate` supplies it): when any tenant owns
+        ASIDs, a translate for an ASID the caller does not own raises
+        :class:`IsolationError` BEFORE any TLB state is read or filled —
+        range entries and prefetch fills are keyed by ASID, so nothing can
+        leak across the boundary. With no tenants registered the check is
+        a single truthiness test (bit-identical fast path).
 
         Returns (physical page, walk cost, hit). ``phys`` overrides the
         table-derived value (trace replay: the recorded access already knows
@@ -710,6 +888,13 @@ class IOMMU:
         walk cost — conservative, no partial-latency credit — while a
         timely prefetched hit costs 0 like any other hit.
         """
+        if self._asid_tenant:
+            self._check_tenant(tenant, asid, page)
+            if self.sanitizer is not None:
+                # independent shadow check: catches a monkeypatched /
+                # buggy _check_tenant red-handed (cross-tenant-translate)
+                self.sanitizer.check_tenant_translate(self, tenant, asid,
+                                                      page)
         pf = self.prefetch_config.enabled
         ranges = self.range_max
         key = (asid, page)
@@ -920,11 +1105,11 @@ class IOMMU:
         if tlb == self.tlb_config:
             return
         stats = self.tlb.stats
+        tenant_stats = self.tlb.tenant_stats
         self.tlb_config = tlb
-        self.tlb = TranslationCache(tlb.n_entries, policy=tlb.policy,
-                                    seed=tlb.seed, ways=tlb.ways,
-                                    range_aware=bool(tlb.ranges))
+        self.tlb = self._build_cache(tlb)
         self.tlb.stats = stats
+        self.tlb.tenant_stats = tenant_stats
         self.tlb.stats.invalidations += 1
         self._pending.clear()
         self._prefetched.clear()
@@ -970,6 +1155,17 @@ class IOMMU:
                 fills=self.range_fills, hits=self.range_hits,
                 coalesced_pages=self.coalesced_pages,
                 splits=self.range_splits)
+        if self._tenants:
+            parts = self.tlb_config.partition_dict
+            tenant = {}
+            for name, dom in sorted(self._tenants.items()):
+                block = dom.stats()
+                block["ways"] = parts.get(name, 0)
+                ts = self.tlb.tenant_stats.get(name)
+                if ts is not None:
+                    block["tlb"] = ts.as_dict()
+                tenant[name] = block
+            out["tenant"] = tenant
         return out
 
 
@@ -1095,6 +1291,6 @@ class TLBAutoTuner:
 
 
 __all__ = ["AutoTuneConfig", "CountingWalk", "IOAddressSpace", "IOMMU",
-           "PrefetchConfig", "Sv39Walk", "TLBAutoTuner", "TLBConfig",
-           "WalkCacheConfig", "WalkModel", "WalkStats",
-           "default_autotune_candidates"]
+           "IsolationError", "PrefetchConfig", "Sv39Walk", "TLBAutoTuner",
+           "TLBConfig", "TenantDomain", "WalkCacheConfig", "WalkModel",
+           "WalkStats", "default_autotune_candidates"]

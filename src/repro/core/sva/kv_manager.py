@@ -68,8 +68,20 @@ counters (disjoint zero-copy vs staging), ``tlb:`` the IOMMU's TLBStats
 dict, ``iommu:`` {walk, epoch, asids, tlb_entries, tlb_ways, tlb_policy,
 autotune: when tuning}, ``pool_*`` page-pool gauges, ``prefix:`` the
 PrefixIndex block (hits/misses/pages_shared/tokens_saved/evictions/
-steals/cached_pages/policy/max_pages) when sharing is on, ``transfer:``
-the TransferStats block once a migration has run.
+steals/cached_pages/policy/max_pages) when sharing is on, ``tenant:``
+per-tenant quota/occupancy/TLB blocks when tenants are configured,
+``transfer:`` the TransferStats block once a migration has run.
+
+Multi-tenant serving (``tenants={name: {quota_pages,
+quota_prefix_pages, tlb_ways}}``): each tenant gets a
+:class:`~repro.core.sva.iommu.TenantDomain` (admission attaches every
+slot under its owner, so the decode gather stream is isolation-checked
+each step), a page quota admission defers on and the scheduler preempts
+over, a prefix-cache scope of its own (identical cross-tenant prompts
+NEVER share pages — the index keys are tenant-scoped at the root), an
+optional private prefix-page cap, and optionally private IOTLB ways
+(``TLBConfig.partitions``). No tenants configured = bit-identical to the
+single-tenant manager.
 """
 from __future__ import annotations
 
@@ -102,6 +114,7 @@ class SeqState:
     done: bool = False
     shared_pages: int = 0         # leading pages mapped from the prefix index
     prefill_start: int = 0        # first prompt position that needs compute
+    tenant: Optional[str] = None  # owning tenant domain (None = untenanted)
 
 
 class _PrefixNode:
@@ -113,10 +126,11 @@ class _PrefixNode:
     page."""
 
     __slots__ = ("page", "parent", "key", "children", "partials",
-                 "last_used", "uses")
+                 "last_used", "uses", "tenant")
 
     def __init__(self, page: Optional[int], parent: Optional["_PrefixNode"],
-                 key: Optional[Tuple[int, ...]]):
+                 key: Optional[Tuple[int, ...]],
+                 tenant: Optional[str] = None):
         self.page = page
         self.parent = parent
         self.key = key
@@ -124,6 +138,7 @@ class _PrefixNode:
         self.partials: Dict[Tuple[int, ...], List] = {}  # content -> [page, lru, uses]
         self.last_used = 0
         self.uses = 0
+        self.tenant = tenant      # owning tenant (root-level scope tag)
 
 
 @dataclass
@@ -184,8 +199,21 @@ class PrefixIndex:
         return len(self._node_by_page) + len(self._partial_by_page)
 
     # ------------------------------------------------------------- lookup
-    def match(self, tokens: Sequence[int]) -> Tuple[List[int], int]:
-        """Longest shared prefix of ``tokens`` already resident in the pool.
+    @staticmethod
+    def _scoped(tenant: Optional[str],
+                key: Tuple[int, ...]) -> Tuple:
+        """Root-level key scoping: a tenant's chains hang off root children
+        keyed ``(tenant, tok...)`` — deeper levels are reachable only
+        through them, so one scope tag isolates the whole subtree.
+        ``tenant=None`` keys are byte-identical to the untenanted index
+        (adversarial cross-tenant prefix collisions CANNOT share pages)."""
+        return key if tenant is None else (tenant,) + key
+
+    def match(self, tokens: Sequence[int],
+              tenant: Optional[str] = None) -> Tuple[List[int], int]:
+        """Longest shared prefix of ``tokens`` already resident in the pool
+        (within ``tenant``'s scope — cached KV never crosses the tenant
+        boundary even for identical token content).
 
         Returns (pages, matched_tokens): full pages matched by content chain,
         plus the cached partial tail page iff it covers the ENTIRE remaining
@@ -198,7 +226,10 @@ class PrefixIndex:
         pages: List[int] = []
         i = 0
         while i + p <= len(tokens):
-            child = node.children.get(tuple(tokens[i:i + p]))
+            key = tuple(tokens[i:i + p])
+            if node is self.root:
+                key = self._scoped(tenant, key)
+            child = node.children.get(key)
             if child is None:
                 break
             child.last_used = now
@@ -208,8 +239,9 @@ class PrefixIndex:
             i += p
         rem = tuple(tokens[i:])
         matched = i
-        if rem and rem in node.partials:
-            entry = node.partials[rem]
+        pkey = self._scoped(tenant, rem) if node is self.root else rem
+        if rem and pkey in node.partials:
+            entry = node.partials[pkey]
             entry[1] = now
             entry[2] += 1
             pages.append(entry[0])
@@ -218,11 +250,12 @@ class PrefixIndex:
 
     # ----------------------------------------------------------- register
     def register(self, tokens: Sequence[int], pages: Sequence[int],
-                 pool: PagePool) -> None:
-        """Insert a newly admitted prompt's pages. Each NEW entry takes one
-        pool reference (the warm-cache ownership that outlives the
-        sequence); already-present entries are left untouched (the admitted
-        sequence mapped those very pages via ``match``)."""
+                 pool: PagePool, tenant: Optional[str] = None) -> None:
+        """Insert a newly admitted prompt's pages under ``tenant``'s scope.
+        Each NEW entry takes one pool reference (the warm-cache ownership
+        that outlives the sequence); already-present entries are left
+        untouched (the admitted sequence mapped those very pages via
+        ``match``)."""
         p = self.page_size
         now = self._tick()
         node = self.root
@@ -230,9 +263,11 @@ class PrefixIndex:
         li = 0
         while i + p <= len(tokens):
             key = tuple(tokens[i:i + p])
+            if node is self.root:
+                key = self._scoped(tenant, key)
             child = node.children.get(key)
             if child is None:
-                child = _PrefixNode(pages[li], node, key)
+                child = _PrefixNode(pages[li], node, key, tenant=tenant)
                 child.uses = 1            # the registering admission
                 node.children[key] = child
                 self._node_by_page[pages[li]] = child
@@ -242,9 +277,10 @@ class PrefixIndex:
             i += p
             li += 1
         rem = tuple(tokens[i:])
-        if rem and rem not in node.partials and li < len(pages):
-            node.partials[rem] = [pages[li], now, 1]
-            self._partial_by_page[pages[li]] = (node, rem)
+        pkey = self._scoped(tenant, rem) if node is self.root else rem
+        if rem and pkey not in node.partials and li < len(pages):
+            node.partials[pkey] = [pages[li], now, 1]
+            self._partial_by_page[pages[li]] = (node, pkey)
             pool.share([pages[li]])
 
     # ----------------------------------------------------------- eviction
@@ -258,6 +294,22 @@ class PrefixIndex:
             return (uses, recency)
         return (uses * covered / self.page_size, recency)     # gdsfs
 
+    @staticmethod
+    def _content_len(content: Tuple) -> int:
+        """Token count a partial's content key covers (a root-level scoped
+        key carries the tenant tag first — not a token)."""
+        return len(content) - (1 if content
+                               and isinstance(content[0], str) else 0)
+
+    def _tenant_of_entry(self, kind: str, node: "_PrefixNode",
+                         key: Tuple) -> Optional[str]:
+        """Owning tenant of an evictable entry: the node's root-level scope
+        tag, or — for a partial hanging directly off the root — the scope
+        prefix of its content key."""
+        if kind == "node" or node is not self.root:
+            return node.tenant
+        return key[0] if key and isinstance(key[0], str) else None
+
     def _candidates(self):
         """(score, kind, node, key) for every evictable entry — partial
         pages, and leaf full-page nodes (no children, no partials); parents
@@ -268,22 +320,41 @@ class PrefixIndex:
             n = stack.pop()
             stack.extend(n.children.values())
             for content, (page, lru, uses) in n.partials.items():
-                out.append((self._score(uses, lru, len(content)),
+                out.append((self._score(uses, lru,
+                                        self._content_len(content)),
                             "partial", n, content))
             if n is not self.root and not n.children and not n.partials:
                 out.append((self._score(n.uses, n.last_used, self.page_size),
                             "node", n, n.key))
         return out
 
-    def evict_one(self, pool: PagePool) -> bool:
+    def cached_pages_by_tenant(self) -> Dict[Optional[str], int]:
+        """Warm-cache footprint per tenant scope (None = untenanted) — the
+        gauge per-tenant prefix quotas are enforced against."""
+        out: Dict[Optional[str], int] = {}
+        for node in self._node_by_page.values():
+            out[node.tenant] = out.get(node.tenant, 0) + 1
+        for node, content in self._partial_by_page.values():
+            t = self._tenant_of_entry("partial", node, content)
+            out[t] = out.get(t, 0) + 1
+        return out
+
+    def evict_one(self, pool: PagePool,
+                  tenant: object = False) -> bool:
         """Drop the policy-selected evictable entry whose page the index is
         the SOLE owner of (refcount 1 — freeing it actually returns a
         page). Entries still referenced by live sequences are kept: evicting
-        them frees nothing and only destroys future sharing value. Returns
-        False when no eviction can free a page."""
+        them frees nothing and only destroys future sharing value.
+        ``tenant`` (pass a name or None) restricts eviction to one tenant
+        scope — per-tenant prefix quotas shed only their owner's entries;
+        the ``False`` default considers every scope. Returns False when no
+        eviction can free a page."""
         page_of = lambda c: c[2].partials[c[3]][0] if c[1] == "partial" \
             else c[2].page
         cands = [c for c in self._candidates() if pool.refcount(page_of(c)) == 1]
+        if tenant is not False:
+            cands = [c for c in cands
+                     if self._tenant_of_entry(c[1], c[2], c[3]) == tenant]
         if not cands:
             return False
         _, kind, node, key = min(cands, key=lambda c: c[0])
@@ -306,6 +377,16 @@ class PrefixIndex:
             return
         while self.n_cached_pages > self.max_pages:
             if not self.evict_one(pool):
+                break
+
+    def enforce_tenant_cap(self, pool: PagePool, tenant: Optional[str],
+                           cap: int) -> None:
+        """Per-tenant prefix quota: shed ``tenant``'s sole-owned entries
+        until its scope fits ``cap`` cached pages (0 = uncapped)."""
+        if not cap:
+            return
+        while self.cached_pages_by_tenant().get(tenant, 0) > cap:
+            if not self.evict_one(pool, tenant=tenant):
                 break
 
     def evictable_pages(self, pool: PagePool) -> int:
@@ -458,11 +539,46 @@ class PagedKVManager:
                  autotune: Optional[AutoTuneConfig] = None,
                  prefix_autotune: int = 0,
                  pool_pages: Optional[int] = None,
-                 sanitize: Optional[bool] = None):
+                 sanitize: Optional[bool] = None,
+                 tenants: Optional[Dict[str, dict]] = None):
         assert offload_mode in ("zero_copy", "copy")
         if layout is None:
             layout = "global" if offload_mode == "zero_copy" else "per_slot"
         assert layout in ("global", "per_slot")
+        # Multi-tenant domains: name -> {quota_pages, quota_prefix_pages,
+        # tlb_ways} (every knob optional, 0 = unlimited/shared). Quotas
+        # need the one shared pool; nonzero tlb_ways way-partition the
+        # serving IOTLB per tenant.
+        self.tenant_specs: Dict[str, dict] = \
+            {str(t): dict(spec or {}) for t, spec in tenants.items()} \
+            if tenants else {}
+        tlb_partitions: Dict[str, int] = {}
+        if self.tenant_specs:
+            if layout != "global":
+                raise ValueError("tenants require the global layout "
+                                 "(quotas meter the one shared pool)")
+            allowed = {"quota_pages", "quota_prefix_pages", "tlb_ways"}
+            for t, spec in self.tenant_specs.items():
+                unknown = set(spec) - allowed
+                if unknown:
+                    raise ValueError(
+                        f"tenant {t!r}: unknown keys {sorted(unknown)} "
+                        f"(expected {sorted(allowed)})")
+                for k, v in spec.items():
+                    if not isinstance(v, int) or v < 0:
+                        raise ValueError(
+                            f"tenant {t!r}: {k}={v!r} (need an int >= 0)")
+                if spec.get("tlb_ways"):
+                    tlb_partitions[t] = spec["tlb_ways"]
+            if tlb_partitions and autotune is not None:
+                raise ValueError(
+                    "TLB way partitions and the geometry auto-tuner are "
+                    "mutually exclusive (a retune would drop the "
+                    "partitions)")
+            if tlb_partitions and not tlb_ways:
+                raise ValueError(
+                    "per-tenant tlb_ways need a set-associative TLB "
+                    "(set tlb_ways on the manager)")
         self.n_slots = n_slots
         self.max_pages = max_pages_per_slot
         self.page_size = page_size
@@ -512,8 +628,13 @@ class PagedKVManager:
         # the simulator configures as a 4-entry hardware IOTLB + Sv39 walk.
         self.iommu = IOMMU(walk_model=CountingWalk(),
                            tlb=TLBConfig(tlb_entries, tlb_policy,
-                                         ways=tlb_ways, ranges=tlb_ranges),
+                                         ways=tlb_ways, ranges=tlb_ranges,
+                                         partitions=tlb_partitions),
                            prefetch=tlb_prefetch or PrefetchConfig())
+        # One TenantDomain per configured tenant: admission attaches each
+        # slot under its owner, so every translate is isolation-checked.
+        self.tenant_domains = {t: self.iommu.register_tenant(t)
+                               for t in sorted(self.tenant_specs)}
         # Online geometry auto-tuner (default off): translate_step advances
         # it one window per decode step; a geometry switch is a flush +
         # epoch bump, which the engine observes as a full table upload.
@@ -555,13 +676,63 @@ class PagedKVManager:
         """Full-flush count — owned by the IOMMU (paper Listing 1)."""
         return self.iommu.epoch
 
+    # ------------------------------------------------------------- tenants
+    @property
+    def has_tenants(self) -> bool:
+        return bool(self.tenant_specs)
+
+    def _check_tenant_name(self, tenant: Optional[str]) -> None:
+        if tenant is not None and tenant not in self.tenant_specs:
+            raise ValueError(f"tenant {tenant!r} is not configured "
+                             f"(known: {sorted(self.tenant_specs)})")
+
+    def tenant_pages_used(self, tenant: Optional[str]) -> int:
+        """Pool pages currently mapped by the tenant's live sequences
+        (shared prefix pages count once per sequence holding them — the
+        quota meters mappings, like the pool refcounts do)."""
+        return sum(len(st.pages) for st in self.seqs.values()
+                   if st.tenant == tenant)
+
+    def tenant_quota(self, tenant: Optional[str]) -> int:
+        """The tenant's page quota (0 = unlimited)."""
+        if tenant is None or tenant not in self.tenant_specs:
+            return 0
+        return self.tenant_specs[tenant].get("quota_pages", 0)
+
+    def tenant_headroom(self, tenant: Optional[str]) -> int:
+        """Pages the tenant may still map under its quota
+        (``pool_pages`` stands in for 'unlimited')."""
+        quota = self.tenant_quota(tenant)
+        if not quota:
+            return self.pool_pages
+        return max(0, quota - self.tenant_pages_used(tenant))
+
+    def tenants_over_quota(self) -> List[str]:
+        """Tenants whose live mappings exceed their page quota right now
+        (decode growth runs ahead of admission-time checks) — the
+        scheduler's quota-pressure preemption signal."""
+        return [t for t in sorted(self.tenant_specs)
+                if self.tenant_quota(t)
+                and self.tenant_pages_used(t) > self.tenant_quota(t)]
+
+    def _enforce_tenant_prefix_caps(self) -> None:
+        if self.prefix is None:
+            return
+        for t, spec in self.tenant_specs.items():
+            cap = spec.get("quota_prefix_pages", 0)
+            if cap:
+                self.prefix.enforce_tenant_cap(self.pool, t, cap)
+
     # ------------------------------------------------------------ admission
-    def ensure_fits(self, prompt_len: int, max_tokens: int) -> int:
+    def ensure_fits(self, prompt_len: int, max_tokens: int,
+                    tenant: Optional[str] = None) -> int:
         """Single source of truth for the slot-capacity check (used by both
         ``admit`` and the engine's ``submit``). Returns the page count
         needed; raises :class:`CapacityError` when the request can never
         fit — silently truncating the reservation would later wrap page
-        indices and corrupt other sequences' KV."""
+        indices and corrupt other sequences' KV. With ``tenant`` the check
+        extends to the tenant's page quota: a request needing more pages
+        than the quota allows can never run, even with the tenant idle."""
         need = -(-(prompt_len + max_tokens) // self.page_size)
         if need > self.max_pages:
             raise CapacityError(
@@ -573,6 +744,11 @@ class PagedKVManager:
                 f"prompt_len={prompt_len} + max_tokens={max_tokens} needs "
                 f"{need} pages but the physical pool holds "
                 f"{self.pool_pages}")
+        quota = self.tenant_quota(tenant)
+        if quota and need > quota:
+            raise CapacityError(
+                f"prompt_len={prompt_len} + max_tokens={max_tokens} needs "
+                f"{need} pages but tenant {tenant!r}'s quota is {quota}")
         return need
 
     def _alloc_evicting(self, n: int, run: bool = False) -> List[int]:
@@ -591,7 +767,8 @@ class PagedKVManager:
 
     def admit(self, seq_id: int, prompt_len: int, max_tokens: int,
               tokens: Optional[Sequence[int]] = None,
-              lazy: bool = False) -> Optional[SeqState]:
+              lazy: bool = False,
+              tenant: Optional[str] = None) -> Optional[SeqState]:
         """Allocate a slot + pages for a prompt.
 
         ``tokens`` (the actual prompt ids) enables prefix sharing: full
@@ -612,17 +789,26 @@ class PagedKVManager:
         would let another admission share garbage. The engine registers
         progressively via :meth:`register_progress` as chunks complete.
 
+        ``tenant`` admits under a configured tenant domain: the slot's ASID
+        is owned by (and isolation-checked against) that tenant, prefix
+        matching is scoped to the tenant's own cached KV, and the tenant's
+        page quota gates the admission (over quota -> None, wait).
+
         Returns None when no slot/pages are free right now (continuous
         batching waits); raises :class:`CapacityError` for requests that can
         never fit (see ``ensure_fits``).
         """
-        need = self.ensure_fits(prompt_len, max_tokens)
+        self._check_tenant_name(tenant)
+        need = self.ensure_fits(prompt_len, max_tokens, tenant=tenant)
         if lazy:
             if self.layout != "global":
                 raise ValueError("lazy admission requires the global layout")
             need = max(-(-prompt_len // self.page_size), 1)
         if not self.free_slots:
             return None
+        quota = self.tenant_quota(tenant)
+        if quota and self.tenant_pages_used(tenant) + need > quota:
+            return None                      # over quota: wait (transient)
         slot = self.free_slots[-1]
         shared: List[int] = []
         prefill_start = 0
@@ -630,7 +816,7 @@ class PagedKVManager:
                    and prompt_len > 0)
         if sharing:
             tokens = list(tokens)[:prompt_len]
-            shared, matched = self.prefix.match(tokens)
+            shared, matched = self.prefix.match(tokens, tenant=tenant)
             # Always recompute >= 1 token for logits; when the whole prompt
             # is resident the recomputed token's page is shared and the
             # engine drops its (identical) KV write.
@@ -654,11 +840,13 @@ class PagedKVManager:
         pages = shared + fresh
         self.free_slots.pop()
         st = SeqState(seq_id, slot, prompt_len, pages, max_tokens,
-                      shared_pages=len(shared), prefill_start=prefill_start)
+                      shared_pages=len(shared), prefill_start=prefill_start,
+                      tenant=tenant)
         self.seqs[seq_id] = st
         if sharing:
             if not lazy:
-                self.prefix.register(tokens, pages, self.pool)
+                self.prefix.register(tokens, pages, self.pool,
+                                     tenant=tenant)
             if shared:
                 self.prefix.stats.hits += 1
                 self.prefix.stats.pages_shared += len(shared)
@@ -666,6 +854,7 @@ class PagedKVManager:
             else:
                 self.prefix.stats.misses += 1
             self.prefix.enforce_cap(self.pool)
+            self._enforce_tenant_prefix_caps()
         if self.layout == "global":
             row = np.full((self.max_pages,), self.null_page, np.int32)
             row[:need] = pages
@@ -694,7 +883,9 @@ class PagedKVManager:
                 prompt_len * self.kv_bytes_per_token
         # PASID-style per-request address space: ASID == batch slot. map()
         # installs the logical->physical table and warms the shared TLB.
-        self.iommu.attach(slot).map(pages)
+        # Tenant ownership is established here — every later translate of
+        # this slot is isolation-checked against it.
+        self.iommu.attach(slot, tenant=tenant).map(pages)
         return st
 
     def append_token(self, seq_id: int, token: int) -> None:
@@ -806,8 +997,10 @@ class PagedKVManager:
         st = self.seqs[seq_id]
         toks = [int(t) for t in tokens[:computed]]
         n = -(-computed // self.page_size)
-        self.prefix.register(toks, st.pages[:n], self.pool)
+        self.prefix.register(toks, st.pages[:n], self.pool,
+                             tenant=st.tenant)
         self.prefix.enforce_cap(self.pool)
+        self._enforce_tenant_prefix_caps()
 
     def preempt(self, seq_id: int, resident_tokens:
                 Optional[Sequence[int]] = None) -> None:
@@ -826,7 +1019,8 @@ class PagedKVManager:
         if self.prefix is not None and resident_tokens:
             toks = [int(t) for t in resident_tokens]
             n = -(-len(toks) // self.page_size)
-            self.prefix.register(toks, st.pages[:n], self.pool)
+            self.prefix.register(toks, st.pages[:n], self.pool,
+                                 tenant=st.tenant)
         snap = (self.sanitizer.snapshot_rc(self.pool, st.pages)
                 if self.sanitizer is not None else None)
         self.pool.free(st.pages)
@@ -841,16 +1035,17 @@ class PagedKVManager:
             self.sanitizer.check_release(self.pool, seq_id, st.pages, snap)
 
     def resume(self, seq_id: int, prompt_len: int, max_tokens: int,
-               tokens: Optional[Sequence[int]] = None) -> Optional[SeqState]:
+               tokens: Optional[Sequence[int]] = None,
+               tenant: Optional[str] = None) -> Optional[SeqState]:
         """Re-admit a preempted sequence. The caller passes every
         KV-resident token it had as the new prompt (with ``max_tokens``
         rebased to the remaining budget); with ``tokens`` the prefix index
         re-matches the pages :meth:`preempt` registered — a warm resume
         costs one recomputed token — and without a match the KV is
         recomputed from tokens. Either way this is a fresh lazy admission:
-        new slot, new ASID, new pages."""
+        new slot, new ASID, new pages (owned by the same tenant)."""
         st = self.admit(seq_id, prompt_len, max_tokens, tokens=tokens,
-                        lazy=True)
+                        lazy=True, tenant=tenant)
         if st is not None:
             self.resumes += 1
         return st
@@ -922,7 +1117,8 @@ class PagedKVManager:
                 sp.table[lp] = pp
         before = iommu.stats()["tlb"]
         for lp in range(n):
-            _, cost, _ = iommu.translate(src_slot, lp)
+            # the hand-off DMA runs under the sequence's tenant identity
+            _, cost, _ = iommu.translate(src_slot, lp, tenant=st.tenant)
             ts.ptw_cycles += cost
         after = iommu.stats()["tlb"]
         for k, attr in (("hits", "tlb_hits"), ("misses", "tlb_misses"),
@@ -971,7 +1167,8 @@ class PagedKVManager:
         self.sva_stats.map_calls += 1
         self.sva_stats.table_entries_written += n
         self.sva_stats.bytes_mapped += st.length * self.kv_bytes_per_token
-        self.iommu.attach(dst_slot).map(new_pages)
+        # the decode-side ASID keeps the sequence's tenant ownership
+        self.iommu.attach(dst_slot, tenant=st.tenant).map(new_pages)
         return st
 
     def free_page_headroom(self) -> int:
@@ -1044,7 +1241,10 @@ class PagedKVManager:
                     else resident.get(st.seq_id, st.length))
             n = min(-(-toks // self.page_size), len(st.pages))
             for lp in range(n):
-                phys, _, _ = self.iommu.translate(st.slot, lp)
+                # the gather runs under the sequence's tenant identity, so
+                # the live hot path exercises the isolation gate every step
+                phys, _, _ = self.iommu.translate(st.slot, lp,
+                                                  tenant=st.tenant)
                 out.append((st.slot, lp, phys))
         if self.autotuner is not None:
             self.autotuner.observe_step()
@@ -1097,6 +1297,22 @@ class PagedKVManager:
                              "max_pages": self.prefix.max_pages}
             if self.prefix_tuner is not None:
                 out["prefix"]["tuner"] = self.prefix_tuner.stats()
+        if self.tenant_specs:
+            io_tenant = io.get("tenant", {})
+            prefix_by_tenant = (self.prefix.cached_pages_by_tenant()
+                                if self.prefix is not None else {})
+            tenant = {}
+            for name, spec in sorted(self.tenant_specs.items()):
+                blk = dict(
+                    seqs=sum(1 for st in self.seqs.values()
+                             if st.tenant == name),
+                    pages_used=self.tenant_pages_used(name),
+                    quota_pages=spec.get("quota_pages", 0),
+                    prefix_pages=prefix_by_tenant.get(name, 0),
+                    quota_prefix_pages=spec.get("quota_prefix_pages", 0))
+                blk.update(io_tenant.get(name, {}))
+                tenant[name] = blk
+            out["tenant"] = tenant
         if self.transfer_stats.transfers:
             out["transfer"] = self.transfer_stats.as_dict()
         if self.sanitizer is not None:

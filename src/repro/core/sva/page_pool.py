@@ -170,6 +170,15 @@ class PagePool:
     def refcount(self, page: int) -> int:
         return int(self._ref[page])
 
+    def total_refs(self) -> int:
+        """Total live mappings (sum of refcounts). This is the gauge
+        tenant page quotas meter against: a prefix page shared by two
+        sequences counts twice, exactly like ``len(SeqState.pages)`` does
+        in ``PagedKVManager.tenant_pages_used`` — so the sum of every
+        tenant's mapped pages plus the prefix cache's own holds must
+        reconcile with this number (pinned by tests/test_multitenant.py)."""
+        return int(self._ref.sum())
+
     def is_shared(self, page: int) -> bool:
         """True when more than one mapping references ``page`` — a write
         through any single mapping must copy-on-write first."""

@@ -36,6 +36,13 @@ Detectors (each has an injected-bug test in tests/test_svasan.py):
   leak-at-release           ``PagedKVManager.release`` returned without
                             dropping the sequence's reference on one of its
                             pages
+  cross-tenant-translate    a translation reached the TLB under a tenant
+                            identity that does not own the ASID — the
+                            multi-tenant isolation gate in
+                            ``IOMMU.translate`` was bypassed (svasan
+                            re-derives ownership from the tenant registry
+                            independently, so a patched-out gate is still
+                            caught)
 
 Enabling: set ``REPRO_SVASAN=1`` in the environment (the CI tier-1 job
 does), or pass the explicit knobs — ``PagedKVManager(sanitize=True)`` /
@@ -228,6 +235,23 @@ class SVASanitizer:
                 "for a logical page that was unmapped after the fill was "
                 "issued — the fill outlived its mapping", key=key,
                 state=FREE)
+
+    def check_tenant_translate(self, iommu: "IOMMU",
+                               tenant: Optional[str], asid: int,
+                               page: int) -> None:
+        """A translation is entering the TLB under ``tenant``'s identity:
+        the ASID's registered owner must be that tenant. Runs AFTER the
+        IOMMU's own isolation gate and re-derives ownership from the
+        registry, so a bypassed/patched gate is caught here."""
+        self.checks += 1
+        owner = iommu._asid_tenant.get(asid)
+        if owner is not None and owner != tenant:
+            self._report(
+                "cross-tenant-translate",
+                f"translation issued under tenant {tenant!r} for asid "
+                f"{asid} owned by tenant {owner!r} — the isolation gate "
+                "was bypassed (a foreign page would have been translated)",
+                key=(asid, page), state=OWNED)
 
     def check_unmapped(self, iommu: "IOMMU", asid: int,
                        lps: Optional[Iterable[int]] = None) -> None:

@@ -52,6 +52,20 @@ gdsfs, and are tracked in a per-ASID side index so ``range_covering``
 resolves a logical page without scanning sets. The owning IOMMU is the
 only producer of range keys (coalescing on fill, splitting on partial
 invalidation — see iommu.py).
+
+Way partitioning (``partitions={tenant: ways}``, the MMU-partitioning
+axis of multi-tenant serving): each named tenant is granted a private
+way budget *within every set*; the remaining ways form a shared pool for
+un-partitioned traffic. A new fill whose tenant's partition is full
+evicts only among that tenant's own entries, so one tenant's thrash can
+never evict another tenant's (or the shared pool's) working set; a fill
+into the shared pool reclaims shared entries first and never steals a
+protected way. ``tenant_of`` (installed by the owning IOMMU) maps a key
+to its tenant; per-tenant :class:`TLBStats` accumulate alongside the
+global counters — a partitioned tenant's ``conflict_misses`` counts
+misses its own partition was too small for while the cache as a whole
+still had room. With no partitions configured every code path reduces to
+the historical behavior bit-for-bit.
 """
 from __future__ import annotations
 
@@ -97,7 +111,9 @@ class TranslationCache:
     associative."""
 
     def __init__(self, n_entries: int, policy: str = "lru", seed: int = 0,
-                 ways: int = 0, range_aware: bool = False):
+                 ways: int = 0, range_aware: bool = False,
+                 partitions: Optional[Dict[str, int]] = None,
+                 tenant_of=None):
         assert n_entries >= 1
         if policy not in POLICIES:
             raise ValueError(f"policy={policy!r} (expected one of {POLICIES})")
@@ -111,6 +127,26 @@ class TranslationCache:
         self.n_sets = n_entries // ways
         self.policy = policy
         self.range_aware = range_aware
+        # Way partitioning: tenant -> private ways per set; leftover ways
+        # are the shared pool. tenant_of (key -> tenant | None) is
+        # installed by the owning IOMMU — None means untenanted traffic.
+        self._partitions: Dict[str, int] = dict(partitions) if partitions \
+            else {}
+        self._tenant_of = tenant_of
+        if self._partitions:
+            bad = {t: w for t, w in self._partitions.items() if w < 1}
+            if bad:
+                raise ValueError(f"partition ways must be >= 1 (got {bad})")
+            reserved = sum(self._partitions.values())
+            if reserved > self.ways:
+                raise ValueError(
+                    f"partitions reserve {reserved} ways but the cache has "
+                    f"{self.ways} per set")
+            self._shared_ways = self.ways - reserved
+        else:
+            self._shared_ways = self.ways
+        #: per-tenant counters (lazily created on first tenant-owned access)
+        self.tenant_stats: Dict[str, TLBStats] = {}
         # per-ASID side index of resident range entries: asid -> {base: n}.
         # Disjoint by construction (the IOMMU never fills overlapping
         # ranges), so range_covering has at most one answer.
@@ -148,10 +184,49 @@ class TranslationCache:
             page = hash(page)
         return int(page) % self.n_sets
 
+    # -------------------------------------------------------- partitioning
+    def _tstats(self, key: Hashable) -> Optional[TLBStats]:
+        """The per-tenant stats block for ``key``'s owner (None when no
+        tenant resolver is installed or the key is untenanted)."""
+        if self._tenant_of is None:
+            return None
+        tenant = self._tenant_of(key)
+        if tenant is None:
+            return None
+        ts = self.tenant_stats.get(tenant)
+        if ts is None:
+            ts = self.tenant_stats[tenant] = TLBStats()
+        return ts
+
+    def _group_of(self, key: Hashable) -> Optional[str]:
+        """The replacement group ``key`` competes in: its tenant when that
+        tenant holds a partition, else None (the shared pool)."""
+        if not self._partitions or self._tenant_of is None:
+            return None
+        t = self._tenant_of(key)
+        return t if t in self._partitions else None
+
+    def _group_members(self, s: OrderedDict,
+                       group: Optional[str]) -> List[Hashable]:
+        return [k for k in s if self._group_of(k) == group]
+
+    def partition_occupancy(self) -> Dict[Optional[str], List[int]]:
+        """Resident entries per set, per partition group (None = shared
+        pool). Diagnostics/tests: a partitioned tenant's count never
+        exceeds its way budget in any set."""
+        out: Dict[Optional[str], List[int]] = {
+            t: [0] * self.n_sets for t in self._partitions}
+        out[None] = [0] * self.n_sets
+        for si, s in enumerate(self._sets):
+            for k in s:
+                out[self._group_of(k)][si] += 1
+        return out
+
     def lookup(self, key: Hashable) -> Tuple[Optional[int], bool]:
         """Returns (value, hit)."""
         s = self._set0 if self.n_sets == 1 \
             else self._sets[self._set_index(key)]
+        ts = None if self._tenant_of is None else self._tstats(key)
         if key in s:
             if self.policy == "lru":
                 s.move_to_end(key)
@@ -160,10 +235,22 @@ class TranslationCache:
             elif self.policy == "gdsfs":
                 self._bump_gdsfs(key)
             self.stats.hits += 1
+            if ts is not None:
+                ts.hits += 1
             return s[key], True
         self.stats.misses += 1
         if len(s) >= self.ways and self._n < self.n_entries:
             self.stats.conflict_misses += 1
+        if ts is not None:
+            ts.misses += 1
+            if self._partitions and self._n < self.n_entries:
+                # The tenant-local analogue: the miss happened while the
+                # tenant's own way budget in this set was exhausted.
+                group = self._group_of(key)
+                budget = self._partitions.get(group, self._shared_ways) \
+                    if group is not None else self._shared_ways
+                if len(self._group_members(s, group)) >= budget > 0:
+                    ts.conflict_misses += 1
         return None, False
 
     def _bump_gdsfs(self, key: Hashable, cost: Optional[float] = None,
@@ -179,22 +266,38 @@ class TranslationCache:
         si = 0 if self.n_sets == 1 else self._set_index(key)
         m[2] = self._clock[si] + self._freq[key] * m[0] / m[1]
 
-    def _evict_one(self, set_index: int) -> None:
+    def _evict_one(self, set_index: int,
+                   among: Optional[set] = None) -> None:
+        """Evict one entry from ``set_index`` by policy. ``among`` (way
+        partitioning) restricts the candidate pool to those keys — the
+        policy then picks its victim among them in the same order it would
+        have considered them unrestricted. ``among=None`` is the
+        historical full-set eviction, bit-for-bit."""
         s = self._sets[set_index]
         if self.policy in ("lru", "fifo"):
-            victim = next(iter(s))
+            victim = next(iter(s)) if among is None \
+                else next(k for k in s if k in among)
         elif self.policy == "lfu":
             # min frequency; ties broken by insertion order (OrderedDict scan)
-            victim = min(s, key=lambda k: self._freq[k])
+            pool = s if among is None else [k for k in s if k in among]
+            victim = min(pool, key=lambda k: self._freq[k])
         elif self.policy == "gdsfs":
             # min priority; ties broken by insertion order. Aging: the set
             # clock rises to the evicted priority (GDSF's L), so a stale
             # high-cost entry eventually loses to fresh traffic.
-            victim = min(s, key=lambda k: self._meta[k][2])
+            pool = s if among is None else [k for k in s if k in among]
+            victim = min(pool, key=lambda k: self._meta[k][2])
             self._clock[set_index] = self._meta[victim][2]
         else:                                     # random (seeded)
-            keys = list(s)
+            keys = list(s) if among is None else [k for k in s if k in among]
             victim = keys[int(self._rng.integers(len(keys)))]
+        if self._tenant_of is not None:
+            vt = self._tenant_of(victim)
+            if vt is not None:
+                vs = self.tenant_stats.get(vt)
+                if vs is None:
+                    vs = self.tenant_stats[vt] = TLBStats()
+                vs.evictions += 1
         del s[victim]
         self._freq.pop(victim, None)
         self._meta.pop(victim, None)
@@ -240,7 +343,24 @@ class TranslationCache:
             return
         if walked:
             self.stats.walks += 1
-        if len(s) >= self.ways:
+            ts = None if self._tenant_of is None else self._tstats(key)
+            if ts is not None:
+                ts.walks += 1
+        if self._partitions:
+            group = self._group_of(key)
+            budget = self._partitions[group] if group is not None \
+                else self._shared_ways
+            members = self._group_members(s, group)
+            if budget > 0 and len(members) >= budget:
+                # the group's own budget is full: thrash stays inside it
+                self._evict_one(si, among=set(members))
+            elif len(s) >= self.ways:
+                # set full while this group is under budget (shared pool
+                # squeezed to zero, or partitions reconfigured): reclaim
+                # shared entries first so protected ways stay protected.
+                shared = self._group_members(s, None)
+                self._evict_one(si, among=set(shared) if shared else None)
+        elif len(s) >= self.ways:
             self._evict_one(si)
         s[key] = value
         self._freq[key] = 1

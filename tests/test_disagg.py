@@ -5,10 +5,11 @@ engine's outputs are BIT-IDENTICAL to the colocated engines at equal
 total slot width, in BOTH transfer modes, under pool pressure, arrival
 interleavings, and preempt-during-pending-transfer races.
 
-Manager-level ``migrate`` unit tests are jax-free; engine tests mirror
-``tests/test_scheduler.py``'s workload and helpers. The interleaving
-property runs as fixed parameterized cases always, plus a
-hypothesis-randomized version when hypothesis is installed."""
+Manager-level ``migrate`` unit tests are jax-free; engine tests drive
+the shared conformance harness (tests/conformance.py) over the same
+pressure workload as tests/test_scheduler.py. The interleaving property
+runs as fixed parameterized cases always, plus a hypothesis-randomized
+version when hypothesis is installed."""
 import dataclasses
 
 import numpy as np
@@ -18,11 +19,12 @@ from benchmarks.trace_replay import replay_trace
 from repro.configs import get_config, reduce_for_smoke
 from repro.configs.paper_soc import PaperSoCConfig
 from repro.core.serving.disagg import DisaggEngine
-from repro.core.serving.engine import ServingEngine
 from repro.core.sva.iommu import (IOMMU, CountingWalk, Sv39Walk, TLBConfig)
 from repro.core.sva.kv_manager import PagedKVManager
 from repro.core.sva.page_pool import OutOfPages
 from repro.models import init_params
+from tests.conformance import (ARRIVAL_CASES, POOL, Workload,
+                               pressure_workload, serve)
 
 try:
     import hypothesis.strategies as st
@@ -39,57 +41,12 @@ def setup():
     return cfg, init_params(cfg, jax.random.key(0))
 
 
-# Same verified pressure workload as tests/test_scheduler.py: mixed
-# lengths, tight pool -> transfers defer, decode-side preemption fires.
-LENS = (11, 23, 5, 17, 9, 13)
-MAXTOKS = (10, 8, 12, 9, 11, 10)
-POOL = 8
-
-
-def _prompts(vocab, n=6, seed=3):
-    rng = np.random.default_rng(seed)
-    return [rng.integers(0, vocab, size=k).tolist() for k in LENS[:n]]
-
-
-def _drive(eng, prompts, maxtoks, arrivals=None):
-    finished = {}
-    if arrivals is None:
-        rids = [eng.submit(p, max_tokens=m)
-                for p, m in zip(prompts, maxtoks)]
-        done = eng.run()
-    else:
-        rids = [None] * len(prompts)
-        order = sorted(range(len(prompts)), key=lambda j: arrivals[j])
-        i, clock = 0, 0
-        while i < len(order) or eng.has_work:
-            while i < len(order) and arrivals[order[i]] <= clock:
-                j = order[i]
-                rids[j] = eng.submit(prompts[j], max_tokens=maxtoks[j])
-                i += 1
-            if eng.has_work:
-                eng.step(finished)
-            clock += 1
-        done = finished
-    return [done[r].out_tokens for r in rids], done
-
-
-def _serve_ref(cfg, params, prompts, maxtoks):
-    """The unconstrained fixed engine at the same total width: the ground
-    truth every scheduling/disaggregation policy must reproduce."""
-    eng = ServingEngine(cfg, params, n_slots=4, max_len=64, page_size=8,
-                        scheduler="fixed")
-    outs, _ = _drive(eng, prompts, maxtoks)
-    return outs
-
-
-def _serve_disagg(cfg, params, mode, prompts, maxtoks, pool_pages=None,
-                  arrivals=None, xfer_iommu=None, **engine_kw):
-    eng = DisaggEngine(cfg, params, n_prefill_slots=2, n_decode_slots=2,
-                       max_len=64, page_size=8, disagg_mode=mode,
-                       pool_pages=pool_pages, xfer_iommu=xfer_iommu,
-                       **engine_kw)
-    outs, done = _drive(eng, prompts, maxtoks, arrivals)
-    return outs, eng, done
+# The shared pressure workload (tests/conformance.py): mixed lengths,
+# tight pool -> transfers defer, decode-side preemption fires. The
+# unconstrained fixed engine at the same total width is the ground truth
+# every disaggregation policy must reproduce (serve(cfg, params, "fixed")).
+def _serve_disagg(cfg, params, mode, workload, **engine_kw):
+    return serve(cfg, params, f"disagg-{mode}", workload, **engine_kw)
 
 
 # ------------------------------------------------- manager-level migrate
@@ -210,9 +167,9 @@ def test_disagg_bit_identical_ample_pool(setup, mode):
     """No pool pressure: prefill-worker chunking + migration + decode-
     worker masking reproduces the fixed engine token-for-token."""
     cfg, params = setup
-    prompts = _prompts(cfg.vocab_size)
-    ref = _serve_ref(cfg, params, prompts, MAXTOKS)
-    outs, eng, done = _serve_disagg(cfg, params, mode, prompts, MAXTOKS)
+    wl = pressure_workload(cfg.vocab_size)
+    ref, _, _ = serve(cfg, params, "fixed", wl)
+    outs, eng, done = _serve_disagg(cfg, params, mode, wl)
     assert outs == ref
     s = eng.stats()
     assert s["disagg"]["transfers"] >= 1
@@ -227,30 +184,22 @@ def test_disagg_bit_identical_under_pressure(setup, mode):
     """Oversubscribed pool: transfers defer/cancel, prefills and decodes
     preempt — and outputs STILL match the unconstrained fixed engine."""
     cfg, params = setup
-    prompts = _prompts(cfg.vocab_size)
-    ref = _serve_ref(cfg, params, prompts, MAXTOKS)
-    outs, eng, _ = _serve_disagg(cfg, params, mode, prompts, MAXTOKS,
-                                 pool_pages=POOL)
+    wl = pressure_workload(cfg.vocab_size)
+    ref, _, _ = serve(cfg, params, "fixed", wl)
+    outs, eng, _ = _serve_disagg(cfg, params, mode, wl, pool_pages=POOL)
     assert outs == ref
     assert eng.stats()["disagg"]["transfers"] >= 1
-
-
-ARRIVAL_CASES = [
-    [0, 0, 0, 0, 0, 0],            # one burst
-    [0, 0, 0, 5, 5, 5],            # two bursts
-    [0, 1, 2, 3, 4, 5],            # steady trickle
-    [0, 0, 9, 9, 0, 4],            # stragglers mid-serve
-]
 
 
 @pytest.mark.parametrize("mode", ["share", "copy"])
 @pytest.mark.parametrize("arrivals", ARRIVAL_CASES)
 def test_disagg_interleaving_bit_identity(setup, mode, arrivals):
     cfg, params = setup
-    prompts = _prompts(cfg.vocab_size)
-    ref = _serve_ref(cfg, params, prompts, MAXTOKS)
-    outs, _, _ = _serve_disagg(cfg, params, mode, prompts, MAXTOKS,
-                               pool_pages=POOL, arrivals=arrivals)
+    ref, _, _ = serve(cfg, params, "fixed", pressure_workload(cfg.vocab_size))
+    outs, _, _ = _serve_disagg(
+        cfg, params, mode,
+        pressure_workload(cfg.vocab_size, arrivals=arrivals),
+        pool_pages=POOL)
     assert outs == ref
 
 
@@ -270,14 +219,15 @@ if HAVE_HYPOTHESIS:
             reduce_for_smoke(get_config("llama3.2-1b")), svasan=True)
         params = init_params(cfg, jax.random.key(0))
         rng = np.random.default_rng(seed)
-        prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
-                   for n, _, _ in reqs]
-        maxtoks = [m for _, m, _ in reqs]
-        arrivals = np.cumsum([g for _, _, g in reqs]).tolist()
-        ref = _serve_ref(cfg, params, prompts, maxtoks)
-        outs, eng, _ = _serve_disagg(cfg, params, "share", prompts,
-                                     maxtoks, pool_pages=POOL,
-                                     arrivals=arrivals)
+        prompts = tuple(tuple(rng.integers(0, cfg.vocab_size,
+                                           size=n).tolist())
+                        for n, _, _ in reqs)
+        maxtoks = tuple(m for _, m, _ in reqs)
+        arrivals = tuple(np.cumsum([g for _, _, g in reqs]).tolist())
+        ref, _, _ = serve(cfg, params, "fixed", Workload(prompts, maxtoks))
+        outs, eng, _ = _serve_disagg(
+            cfg, params, "share",
+            Workload(prompts, maxtoks, arrivals=arrivals), pool_pages=POOL)
         assert outs == ref
         assert eng.stats()["svasan"]["reports"] == 0
 
@@ -292,10 +242,8 @@ def test_migration_svasan_clean(setup, mode):
     deferral, cancellation, and decode-side preemption."""
     cfg, params = setup
     cfg = dataclasses.replace(cfg, svasan=True)
-    prompts = _prompts(cfg.vocab_size)
-    outs, eng, _ = _serve_disagg(cfg, params, mode, prompts, MAXTOKS,
-                                 pool_pages=POOL,
-                                 arrivals=[0, 0, 9, 9, 0, 4])
+    wl = pressure_workload(cfg.vocab_size, arrivals=[0, 0, 9, 9, 0, 4])
+    outs, eng, _ = _serve_disagg(cfg, params, mode, wl, pool_pages=POOL)
     s = eng.stats()
     assert s["disagg"]["transfers"] >= 1
     assert s["svasan"]["reports"] == 0
@@ -308,11 +256,11 @@ def test_preempt_during_pending_transfer(setup):
     prefill completes — without this, the pump migrates a torn-down
     sequence. Copy mode under the straggler arrivals forces the race."""
     cfg, params = setup
-    prompts = _prompts(cfg.vocab_size)
-    ref = _serve_ref(cfg, params, prompts, MAXTOKS)
-    outs, eng, _ = _serve_disagg(cfg, params, "copy", prompts, MAXTOKS,
-                                 pool_pages=POOL,
-                                 arrivals=[0, 0, 9, 9, 0, 4])
+    ref, _, _ = serve(cfg, params, "fixed", pressure_workload(cfg.vocab_size))
+    outs, eng, _ = _serve_disagg(
+        cfg, params, "copy",
+        pressure_workload(cfg.vocab_size, arrivals=[0, 0, 9, 9, 0, 4]),
+        pool_pages=POOL)
     d = eng.stats()["disagg"]
     assert d["cancelled"] >= 1                   # the race happened
     assert d["deferred"] >= 1                    # pool pressure deferred too
@@ -326,9 +274,8 @@ def test_xfer_trace_replays_end_to_end(setup):
     with the source unmap / destination map, and replays through the
     IOMMU cost model without error."""
     cfg, params = setup
-    prompts = _prompts(cfg.vocab_size)
-    _, eng, _ = _serve_disagg(cfg, params, "share", prompts, MAXTOKS,
-                              pool_pages=POOL,
+    wl = pressure_workload(cfg.vocab_size)
+    _, eng, _ = _serve_disagg(cfg, params, "share", wl, pool_pages=POOL,
                               record_translation_trace=True)
     trace = eng.translation_trace
     kinds = {ev[0] for ev in trace}
@@ -356,8 +303,8 @@ def test_disagg_bounded_jit_cache(setup):
     ZERO decode shapes — the bit-identity argument and the no-retracing
     argument are the same argument."""
     cfg, params = setup
-    prompts = _prompts(cfg.vocab_size)
-    _, eng, _ = _serve_disagg(cfg, params, "share", prompts, MAXTOKS,
+    _, eng, _ = _serve_disagg(cfg, params, "share",
+                              pressure_workload(cfg.vocab_size),
                               pool_pages=POOL)
     assert eng._decode_m._cache_size() == 1
     assert eng._prefill._cache_size() <= np.log2(64) * np.log2(4) + 1

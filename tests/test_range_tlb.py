@@ -464,28 +464,14 @@ def setup():
     return cfg, init_params(cfg, jax.random.key(0))
 
 
-def _prefix_prompts(vocab, n=6):
-    rng = np.random.default_rng(7)
-    system = rng.integers(0, vocab, size=24).tolist()
-    out = []
-    for i in range(n):
-        if i % 3 == 2:
-            out.append(rng.integers(0, vocab, size=10).tolist())
-        else:
-            out.append(system + rng.integers(0, vocab, size=5).tolist())
-    return out
-
-
 def _serve_continuous(cfg, params, ranges):
-    from repro.core.serving.engine import ServingEngine
-    cfg = dataclasses.replace(cfg, serve_tlb_ranges=ranges)
-    eng = ServingEngine(cfg, params, n_slots=4, max_len=64, page_size=8,
-                        scheduler="continuous", pool_pages=8,
-                        translation_stats=True)
-    rids = [eng.submit(p, max_tokens=6)
-            for p in _prefix_prompts(cfg.vocab_size)]
-    done = eng.run()
-    return [done[r].out_tokens for r in rids], eng
+    # shared-system-prompt workload + driver from tests/conformance.py
+    from tests.conformance import prefix_workload, serve
+    outs, eng, _ = serve(dataclasses.replace(cfg, serve_tlb_ranges=ranges),
+                         params, "continuous",
+                         prefix_workload(cfg.vocab_size), pool_pages=8,
+                         translation_stats=True)
+    return outs, eng
 
 
 def test_continuous_serving_bit_identical_with_ranges(setup):
@@ -501,21 +487,18 @@ def test_continuous_serving_bit_identical_with_ranges(setup):
 
 @pytest.mark.parametrize("mode", ["share", "copy"])
 def test_disagg_serving_bit_identical_with_ranges(setup, mode):
-    from repro.core.serving.disagg import DisaggEngine
+    from tests.conformance import prefix_workload, serve
     cfg, params = setup
-    prompts = _prefix_prompts(cfg.vocab_size, n=4)
+    wl = prefix_workload(cfg.vocab_size, n=4)
 
-    def serve(ranges):
-        eng = DisaggEngine(dataclasses.replace(cfg,
-                                               serve_tlb_ranges=ranges),
-                           params, n_prefill_slots=2, n_decode_slots=2,
-                           max_len=64, page_size=8, disagg_mode=mode,
-                           translation_stats=True)
-        rids = [eng.submit(p, max_tokens=6) for p in prompts]
-        done = eng.run()
-        return [done[r].out_tokens for r in rids], eng
+    def serve_ranges(ranges):
+        outs, eng, _ = serve(dataclasses.replace(cfg,
+                                                 serve_tlb_ranges=ranges),
+                             params, f"disagg-{mode}", wl,
+                             translation_stats=True)
+        return outs, eng
 
-    off, _ = serve(0)
-    on, eng = serve(8)
+    off, _ = serve_ranges(0)
+    on, eng = serve_ranges(8)
     assert on == off
     assert eng.stats()["disagg"]["transfers"] >= 1

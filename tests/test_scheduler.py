@@ -4,6 +4,9 @@ continuous engine's outputs are BIT-IDENTICAL to the fixed engine's for
 every workload and arrival interleaving (scheduling policy never changes
 tokens), including across preempt/resume round-trips.
 
+Workload constants, the arrival-faithful driver, and the bit-identity
+assertion live in tests/conformance.py (shared with test_disagg.py,
+test_range_tlb.py, and the cross-engine matrix in test_conformance.py).
 The interleaving property runs as fixed parameterized cases always, plus a
 hypothesis-randomized version when hypothesis is installed."""
 import dataclasses
@@ -14,12 +17,13 @@ import pytest
 from benchmarks.trace_replay import replay_trace
 from repro.configs import get_config, reduce_for_smoke
 from repro.configs.paper_soc import PaperSoCConfig
-from repro.core.serving.engine import ServingEngine
 from repro.core.serving.scheduler import Scheduler
 from repro.core.serving.sequence_buffer import SequenceBuffer
 from repro.core.sva.iommu import IOMMU, CountingWalk, TLBConfig
 from repro.core.sva.kv_manager import PagedKVManager
 from repro.models import init_params
+from tests.conformance import (ARRIVAL_CASES, POOL, Workload,
+                               pressure_workload, serve)
 
 try:
     import hypothesis.strategies as st
@@ -34,46 +38,6 @@ def setup():
     import jax
     cfg = reduce_for_smoke(get_config("llama3.2-1b"))
     return cfg, init_params(cfg, jax.random.key(0))
-
-
-# The verified pressure workload: mixed lengths, tight pool -> the
-# continuous engine preempts and resumes while the fixed engine waits.
-LENS = (11, 23, 5, 17, 9, 13)
-MAXTOKS = (10, 8, 12, 9, 11, 10)
-POOL = 8
-
-
-def _prompts(vocab, n=6, seed=3):
-    rng = np.random.default_rng(seed)
-    return [rng.integers(0, vocab, size=k).tolist() for k in LENS[:n]]
-
-
-def _serve(cfg, params, scheduler, prompts, maxtoks, pool_pages=None,
-           arrivals=None, **engine_kw):
-    """Run one engine over the workload; ``arrivals`` (per-request step
-    ticks) are injected between steps. Returns (outputs, engine)."""
-    eng = ServingEngine(cfg, params, n_slots=4, max_len=64, page_size=8,
-                        scheduler=scheduler, pool_pages=pool_pages,
-                        **engine_kw)
-    finished = {}
-    if arrivals is None:
-        rids = [eng.submit(p, max_tokens=m)
-                for p, m in zip(prompts, maxtoks)]
-        done = eng.run()
-    else:
-        rids = [None] * len(prompts)
-        order = sorted(range(len(prompts)), key=lambda j: arrivals[j])
-        i, clock = 0, 0
-        while i < len(order) or eng.has_work:
-            while i < len(order) and arrivals[order[i]] <= clock:
-                j = order[i]
-                rids[j] = eng.submit(prompts[j], max_tokens=maxtoks[j])
-                i += 1
-            if eng.has_work:
-                eng.step(finished)
-            clock += 1
-        done = finished
-    return [done[r].out_tokens for r in rids], eng
 
 
 # -------------------------------------------------------------- validation
@@ -121,9 +85,9 @@ def test_continuous_matches_fixed_ample_pool(setup):
     """No pool pressure: continuous (chunked prefill + masked decode)
     reproduces the fixed engine token-for-token."""
     cfg, params = setup
-    prompts = _prompts(cfg.vocab_size)
-    fixed, _ = _serve(cfg, params, "fixed", prompts, MAXTOKS)
-    cont, eng = _serve(cfg, params, "continuous", prompts, MAXTOKS)
+    wl = pressure_workload(cfg.vocab_size)
+    fixed, _, _ = serve(cfg, params, "fixed", wl)
+    cont, eng, _ = serve(cfg, params, "continuous", wl)
     assert cont == fixed
     assert eng.stats()["sched"]["preemptions"] == 0
 
@@ -134,10 +98,9 @@ def test_preempt_resume_bit_identical_under_pressure(setup):
     rebuild after resume is content-addressed, the pending token is
     re-injected, max_tokens is rebased)."""
     cfg, params = setup
-    prompts = _prompts(cfg.vocab_size)
-    ref, _ = _serve(cfg, params, "fixed", prompts, MAXTOKS)
-    cont, eng = _serve(cfg, params, "continuous", prompts, MAXTOKS,
-                       pool_pages=POOL)
+    wl = pressure_workload(cfg.vocab_size)
+    ref, _, _ = serve(cfg, params, "fixed", wl)
+    cont, eng, _ = serve(cfg, params, "continuous", wl, pool_pages=POOL)
     s = eng.stats()
     assert s["sched"]["preemptions"] >= 1
     assert s["sched"]["resumes"] >= 1
@@ -151,9 +114,8 @@ def test_preemption_svasan_clean(setup):
     preempt/resume round-trips."""
     cfg, params = setup
     cfg = dataclasses.replace(cfg, svasan=True)
-    prompts = _prompts(cfg.vocab_size)
-    cont, eng = _serve(cfg, params, "continuous", prompts, MAXTOKS,
-                       pool_pages=POOL)
+    wl = pressure_workload(cfg.vocab_size)
+    cont, eng, _ = serve(cfg, params, "continuous", wl, pool_pages=POOL)
     s = eng.stats()
     assert s["sched"]["preemptions"] >= 1
     assert s["svasan"]["reports"] == 0
@@ -162,21 +124,13 @@ def test_preemption_svasan_clean(setup):
 
 # ----------------------------------------------------- arrival interleaving
 
-ARRIVAL_CASES = [
-    [0, 0, 0, 0, 0, 0],            # one burst
-    [0, 0, 0, 5, 5, 5],            # two bursts
-    [0, 1, 2, 3, 4, 5],            # steady trickle
-    [0, 0, 9, 9, 0, 4],            # stragglers mid-serve
-]
-
-
 @pytest.mark.parametrize("arrivals", ARRIVAL_CASES)
 def test_interleaving_bit_identity(setup, arrivals):
     cfg, params = setup
-    prompts = _prompts(cfg.vocab_size)
-    ref, _ = _serve(cfg, params, "fixed", prompts, MAXTOKS)
-    cont, _ = _serve(cfg, params, "continuous", prompts, MAXTOKS,
-                     pool_pages=POOL, arrivals=arrivals)
+    ref, _, _ = serve(cfg, params, "fixed", pressure_workload(cfg.vocab_size))
+    cont, _, _ = serve(cfg, params, "continuous",
+                       pressure_workload(cfg.vocab_size, arrivals=arrivals),
+                       pool_pages=POOL)
     assert cont == ref
 
 
@@ -194,13 +148,15 @@ if HAVE_HYPOTHESIS:
         cfg = reduce_for_smoke(get_config("llama3.2-1b"))
         params = init_params(cfg, jax.random.key(0))
         rng = np.random.default_rng(seed)
-        prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
-                   for n, _, _ in reqs]
-        maxtoks = [m for _, m, _ in reqs]
-        arrivals = np.cumsum([g for _, _, g in reqs]).tolist()
-        ref, _ = _serve(cfg, params, "fixed", prompts, maxtoks)
-        cont, _ = _serve(cfg, params, "continuous", prompts, maxtoks,
-                         pool_pages=POOL, arrivals=arrivals)
+        prompts = tuple(tuple(rng.integers(0, cfg.vocab_size,
+                                           size=n).tolist())
+                        for n, _, _ in reqs)
+        maxtoks = tuple(m for _, m, _ in reqs)
+        arrivals = tuple(np.cumsum([g for _, _, g in reqs]).tolist())
+        ref, _, _ = serve(cfg, params, "fixed", Workload(prompts, maxtoks))
+        cont, _, _ = serve(cfg, params, "continuous",
+                           Workload(prompts, maxtoks, arrivals=arrivals),
+                           pool_pages=POOL)
         assert cont == ref
 
 
@@ -212,9 +168,8 @@ def test_bounded_jit_cache_across_mixed_burst(setup):
     mixed-length burst compiles a BOUNDED set of shapes — retracing per
     request would make continuous batching slower than what it replaces."""
     cfg, params = setup
-    prompts = _prompts(cfg.vocab_size)
-    _, eng = _serve(cfg, params, "continuous", prompts, MAXTOKS,
-                    pool_pages=POOL)
+    _, eng, _ = serve(cfg, params, "continuous",
+                      pressure_workload(cfg.vocab_size), pool_pages=POOL)
     assert eng._decode_m._cache_size() == 1       # one masked-decode shape
     n_prefill = eng._prefill._cache_size()
     # power-of-two buckets: suffix lengths up to max_len x row counts up
@@ -228,9 +183,9 @@ def test_preemption_trace_replays_end_to_end(setup):
     """A recorded continuous-scheduler trace carries preempt/resume
     events and replays through the IOMMU cost model without error."""
     cfg, params = setup
-    prompts = _prompts(cfg.vocab_size)
-    _, eng = _serve(cfg, params, "continuous", prompts, MAXTOKS,
-                    pool_pages=POOL, record_translation_trace=True)
+    _, eng, _ = serve(cfg, params, "continuous",
+                      pressure_workload(cfg.vocab_size), pool_pages=POOL,
+                      record_translation_trace=True)
     trace = eng.translation_trace
     kinds = {ev[0] for ev in trace}
     assert {"preempt", "resume", "map", "unmap", "step"} <= kinds

@@ -7,8 +7,8 @@ documented way."""
 import numpy as np
 import pytest
 
-from repro.core.sva.iommu import (IOMMU, CountingWalk, PrefetchConfig,
-                                  TLBConfig)
+from repro.core.sva.iommu import (IOMMU, CountingWalk, IsolationError,
+                                  PrefetchConfig, TLBConfig)
 from repro.core.sva.kv_manager import PagedKVManager
 from repro.core.sva.page_pool import PagePool
 from repro.core.sva.sanitizer import (FREE, OWNED, SHARED, SanitizerError,
@@ -191,6 +191,31 @@ def test_page_leak_at_release_detected(monkeypatch):
     assert rep.detector == "leak-at-release"
     assert rep.page is not None
     assert "leaked" in rep.message
+
+
+# ------------------------------------- detector: cross-tenant-translate
+
+def test_cross_tenant_translate_detected(monkeypatch):
+    """The injected bug: the IOMMU's isolation gate is patched out
+    entirely. The sanitizer re-derives ASID ownership from the registry
+    INSIDE translate, so the foreign translation is still refused —
+    a buggy or bypassed ``_check_tenant`` cannot leak a page silently."""
+    m = mk_manager(tenants={"a": {}, "b": {}})
+    m.admit(1, 8, 4, tokens=list(range(8)), tenant="a")
+    slot = m.seqs[1].slot
+    monkeypatch.setattr(m.iommu, "_check_tenant", lambda *a, **k: None)
+    with pytest.raises(SanitizerError) as ei:
+        m.iommu.translate(slot, 0, tenant="b")
+    rep = ei.value.report
+    assert rep.detector == "cross-tenant-translate"
+    assert "bypassed" in rep.message
+    # with the gate intact the same access raises IsolationError BEFORE
+    # the sanitizer ever sees it (gate first, shadow check second)
+    m2 = mk_manager(tenants={"a": {}, "b": {}})
+    m2.admit(1, 8, 4, tokens=list(range(8)), tenant="a")
+    with pytest.raises(IsolationError):
+        m2.iommu.translate(m2.seqs[1].slot, 0, tenant="b")
+    assert m2.sanitizer.stats()["reports"] == 0
 
 
 # ------------------------------------------------------------ clean path
